@@ -1,0 +1,26 @@
+"""Paper Tables 6/7: tau × alpha ablation (accuracy and training time grids)."""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import out_path, run_method
+
+TAUS = [1e-3, 4e-3, 1.6e-2]
+ALPHAS = [0.1, 0.3, 0.5]
+
+
+def run(steps: int = 160):
+    grid = []
+    for tau in TAUS:
+        for alpha in ALPHAS:
+            r = run_method("fp_grades", steps=steps, tau=tau, alpha=alpha)
+            grid.append({"tau": tau, "alpha": alpha, **r})
+    with open(out_path("table6_7_ablation.json"), "w") as f:
+        json.dump(grid, f, indent=1)
+    return grid
+
+
+if __name__ == "__main__":
+    for r in run():
+        print({k: r[k] for k in ("tau", "alpha", "accuracy", "wall_s",
+                                 "steps_run", "final_frozen_frac")})

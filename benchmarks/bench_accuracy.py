@@ -1,0 +1,21 @@
+"""Paper Table 1: accuracy across {FP, FP+ES, FP+GradES, LoRA, LoRA+ES,
+LoRA+GradES} — reduced-scale analogue on the synthetic task."""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import out_path, run_method
+
+METHODS = ["fp", "fp_es", "fp_grades", "lora", "lora_es", "lora_grades"]
+
+
+def run(steps: int = 240):
+    rows = [run_method(m, steps=steps) for m in METHODS]
+    with open(out_path("table1_accuracy.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

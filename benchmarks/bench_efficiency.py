@@ -1,0 +1,40 @@
+"""Paper Table 4/5: training time + FLOPs per method.
+
+Reuses the Table-1 runs (same six methods); reports wall-clock, steps, FLOPs and
+the two ratios the paper reports (speedup, FLOPs ratio, both vs the FP baseline).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import out_path
+from benchmarks.bench_accuracy import run as run_table1
+
+
+def run(steps: int = 240):
+    src = out_path("table1_accuracy.json")
+    rows = (json.load(open(src)) if os.path.exists(src) else run_table1(steps))
+    base = next(r for r in rows if r["method"] == "fp")
+    table = []
+    for r in rows:
+        table.append({
+            "method": r["method"],
+            "wall_s": r["wall_s"],
+            "ms_per_step": r.get("ms_per_step", 0),
+            "speedup": round(base["wall_s"] / r["wall_s"], 2),
+            "steady_speedup": round(base.get("ms_per_step", 1)
+                                    / max(r.get("ms_per_step", 1), 1e-9), 2),
+            "flops": f'{r["flops"]:.3e}',
+            "flops_ratio": round(r["flops"] / base["flops"], 3),
+            "steps_run": r["steps_run"],
+            "stop": r["stop"],
+        })
+    with open(out_path("table4_efficiency.json"), "w") as f:
+        json.dump(table, f, indent=1)
+    return table
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,58 @@
+"""Aggregates artifacts/dryrun/*.json into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import out_path
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load():
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def markdown_table(rows, mesh="single"):
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | bottleneck | "
+           "bytes/chip | useful | roofline_frac |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        if r.get("status") == "skip":
+            if mesh == r.get("mesh", "single"):
+                out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped: "
+                           f"{r['reason'][:40]} | — | — | — |")
+            continue
+        if r["mesh"] != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | {r['bottleneck']} | "
+            f"{r['bytes_per_chip']/2**30:.1f} GiB | {r['useful_ratio']:.3f} | "
+            f"{r['roofline_frac']:.2e} |")
+    return "\n".join(out)
+
+
+def run():
+    rows = load()
+    ok = [r for r in rows if r.get("status") == "ok"]
+    table = markdown_table(rows, "single")
+    with open(out_path("roofline_single.md"), "w") as f:
+        f.write(table + "\n")
+    with open(out_path("roofline_multi.md"), "w") as f:
+        f.write(markdown_table(rows, "multi") + "\n")
+    summary = [{"name": f"dryrun/{r['arch']}/{r['shape']}/{r['mesh']}",
+                "us_per_call": round(r["step_time_s"] * 1e6, 1),
+                "derived": f"bottleneck={r['bottleneck']} "
+                           f"frac={r['roofline_frac']:.2e}"} for r in ok]
+    return summary
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,242 @@
+"""Central configuration system.
+
+Everything in the framework is driven by three frozen dataclasses:
+
+* :class:`ModelConfig`   — architecture hyperparameters (one per ``--arch``).
+* :class:`GradESConfig`  — the paper's technique (threshold, grace period, monitor mode).
+* :class:`TrainConfig`   — optimization / batching / checkpointing / mesh knobs.
+
+Configs are plain data: hashable, serializable to/from JSON, comparable.  The
+``repro/configs/<arch>.py`` modules each export ``CONFIG`` (the full published
+architecture) and ``reduced()`` (a tiny same-family config for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model architecture
+# ---------------------------------------------------------------------------
+
+#: Families understood by the model zoo dispatcher (repro/models/model.py).
+FAMILIES = ("dense", "moe", "encdec", "hybrid", "xlstm")
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block settings (GShard-style token-choice top-k)."""
+
+    n_experts: int = 8
+    top_k: int = 2
+    d_ff: int = 0                  # per-expert hidden size
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    aux_loss: float = 1e-2
+    group_size: int = 1024         # tokens per dispatch group (bounds scatter size)
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Selective-SSM (Mamba-style) head settings for hybrid blocks."""
+
+    state_dim: int = 16
+    expand: int = 2                # inner dim = expand * d_model
+    dt_rank: int = 0               # 0 -> ceil(d_model / 16)
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny"
+    family: str = "dense"
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 512
+    vocab: int = 512
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    swa_window: int = 0            # 0 -> full causal attention
+    tie_embeddings: bool = False
+    mlp_act: str = "swiglu"        # "swiglu" | "gelu"
+    # --- encoder/decoder (whisper) ---
+    n_encoder_layers: int = 0
+    n_frames: int = 1500           # audio frame stub length fed to the encoder
+    # --- MoE ---
+    moe: Optional[MoEConfig] = None
+    # --- hybrid (hymba): parallel attention + mamba heads ---
+    ssm: Optional[SSMConfig] = None
+    # --- xLSTM: ratio of mLSTM:sLSTM blocks handled by the xlstm stack ---
+    # dtypes
+    dtype: str = "bfloat16"        # activations / params compute dtype
+    param_dtype: str = "float32"   # master parameter dtype
+    # long-context capability flag (sub-quadratic attention path available)
+    subquadratic: bool = False
+    # sequence-parallel attention (Megatron-SP style): shard the seq dim over the
+    # "model" axis inside attention blocks when head counts don't divide the TP
+    # axis (EXPERIMENTS.md §Perf iteration 1).
+    seq_parallel_attn: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.resolved_head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.resolved_head_dim
+
+    @property
+    def dt_rank(self) -> int:
+        assert self.ssm is not None
+        return self.ssm.dt_rank or max(1, -(-self.d_model // 16))
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS in the roofline)."""
+        return _param_count(self, active_only=False)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: shared + top_k experts)."""
+        return _param_count(self, active_only=True)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2)
+
+
+def _param_count(cfg: ModelConfig, *, active_only: bool) -> int:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    attn = d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+    if cfg.moe is not None:
+        e = cfg.moe.top_k if active_only else cfg.moe.n_experts
+        mlp = 3 * d * cfg.moe.d_ff * e + d * cfg.moe.n_experts  # experts + router
+    elif cfg.family == "xlstm":
+        mlp = 2 * d * max(cfg.d_ff, 2 * d)  # up/down proj around the recurrent core
+    else:
+        n_mats = 3 if cfg.mlp_act == "swiglu" else 2
+        mlp = n_mats * d * cfg.d_ff
+    per_layer = attn + mlp + 2 * d  # + norms
+    if cfg.ssm is not None:
+        di = cfg.ssm.expand * d
+        per_layer += d * 2 * di + di * (cfg.dt_rank + 2 * cfg.ssm.state_dim)
+        per_layer += cfg.dt_rank * di + di * cfg.ssm.state_dim + di + di * d
+        per_layer += di * cfg.ssm.conv_width
+    if cfg.family == "xlstm":
+        # q/k/v/o for mLSTM + gate projections; folded into attn above approximately.
+        pass
+    total = cfg.n_layers * per_layer
+    if cfg.n_encoder_layers:
+        enc_per_layer = attn + 2 * d * cfg.d_ff + 2 * d          # gelu mlp
+        dec_cross = d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d + d
+        total += cfg.n_encoder_layers * enc_per_layer + cfg.n_layers * dec_cross
+    total += cfg.vocab * d * (1 if cfg.tie_embeddings else 2) + d
+    return total
+
+
+# ---------------------------------------------------------------------------
+# GradES
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class GradESConfig:
+    """The paper's technique. ``tau`` / ``alpha`` follow Algorithm 1."""
+
+    enabled: bool = True
+    tau: float = 1e-3
+    alpha: float = 0.5                   # grace-period fraction of total steps
+    monitor: str = "delta"               # "delta" (Eq.1, stores prev grads) | "norm_delta"
+    patience: int = 1                    # beyond-paper: consecutive sub-tau steps required
+    # Per-component tau overrides, keyed by matrix-type name (paper Table 10 uses
+    # modality-specific thresholds; we generalize to per-type).
+    tau_overrides: Mapping[str, float] = field(default_factory=dict)
+    # Tier-1: re-jit with stop_gradient once a whole matrix type is frozen.
+    static_repartition: bool = True
+    # Normalize the L1 norm by element count (makes tau transferable across sizes).
+    normalize: bool = True
+
+    def tau_for(self, key: str) -> float:
+        return dict(self.tau_overrides).get(key, self.tau)
+
+
+# ---------------------------------------------------------------------------
+# Training / runtime
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LoRAConfig:
+    rank: int = 32
+    alpha: float = 64.0
+    targets: Tuple[str, ...] = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    seq_len: int = 1024
+    global_batch: int = 8
+    microbatch: int = 0                  # 0 -> no gradient accumulation
+    steps: int = 100
+    # optimizer
+    optimizer: str = "adamw"             # "adamw" | "sgd"
+    lr: float = 2e-5
+    warmup_frac: float = 0.05
+    schedule: str = "cosine"             # "cosine" | "constant"
+    weight_decay: float = 0.01
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    opt_state_dtype: str = "float32"     # "bfloat16" for 1T-scale configs
+    # early stopping baselines
+    grades: GradESConfig = field(default_factory=GradESConfig)
+    lora: Optional[LoRAConfig] = None
+    val_es: bool = False                 # classic validation early stopping
+    val_interval_frac: float = 0.05
+    val_patience: int = 3
+    val_delta: float = 5e-4
+    # memory / distribution
+    remat: str = "none"                  # "none" | "full" | "dots"
+    fsdp: bool = True                    # shard params over the data axis too
+    grad_compression: str = "none"       # "none" | "int8_ef"
+    # checkpointing
+    checkpoint_dir: str = ""
+    checkpoint_every: int = 0
+    keep_checkpoints: int = 3
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Input shape cells (assigned shapes; every arch pairs with all four)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeCell) -> Tuple[bool, str]:
+    """Whether a (arch, shape) cell runs; see DESIGN.md §5 for the skip policy."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "long_500k needs sub-quadratic attention; pure full-attention arch"
+    return True, ""
+
+
+def asdict(cfg: Any) -> Dict[str, Any]:
+    return dataclasses.asdict(cfg)

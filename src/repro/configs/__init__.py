@@ -1,0 +1,61 @@
+"""Architecture registry.
+
+Each ``repro/configs/<id>.py`` exports ``CONFIG`` (the published architecture) and
+``reduced()`` (tiny same-family config for CPU smoke tests).  ``get(name)`` /
+``list_archs()`` are the public lookup API used by the launcher (``--arch``).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, List
+
+from repro.config import ModelConfig
+
+_ARCH_MODULES = [
+    "phi3_medium_14b",
+    "codeqwen1_5_7b",
+    "deepseek_coder_33b",
+    "yi_9b",
+    "whisper_large_v3",
+    "chameleon_34b",
+    "hymba_1_5b",
+    "mixtral_8x22b",
+    "kimi_k2_1t_a32b",
+    "xlstm_350m",
+    # the paper's own fine-tuning subject (reduced-scale stand-in)
+    "qwen3_0_6b",
+]
+
+_ALIAS = {m.replace("_", "-"): m for m in _ARCH_MODULES}
+_ALIAS.update({
+    "phi3-medium-14b": "phi3_medium_14b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "yi-9b": "yi_9b",
+    "whisper-large-v3": "whisper_large_v3",
+    "chameleon-34b": "chameleon_34b",
+    "hymba-1.5b": "hymba_1_5b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "xlstm-350m": "xlstm_350m",
+    "qwen3-0.6b": "qwen3_0_6b",
+})
+
+ASSIGNED: List[str] = [m for m in _ARCH_MODULES if m != "qwen3_0_6b"]
+
+
+def _module(name: str):
+    mod = _ALIAS.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def reduced(name: str) -> ModelConfig:
+    return _module(name).reduced()
+
+
+def list_archs() -> List[str]:
+    return list(_ARCH_MODULES)

@@ -1,0 +1,22 @@
+"""Chameleon-34B [arXiv:2405.09818]. Early-fusion VLM: VQ image tokens share the
+text vocabulary, so the backbone is a plain dense decoder; the VQ tokenizer frontend
+is a STUB (inputs are token ids drawn from the unified vocab)."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="dense",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab=65536,
+    head_dim=128,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(name="chameleon-34b-reduced", family="dense", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=1, d_ff=160, vocab=256,
+                       head_dim=16)

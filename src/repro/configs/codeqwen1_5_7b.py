@@ -1,0 +1,20 @@
+"""CodeQwen1.5-7B [hf:Qwen/CodeQwen1.5-7B]. Dense decoder (MHA: kv == q heads)."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=13440,
+    vocab=92416,
+    head_dim=128,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(name="codeqwen1.5-7b-reduced", family="dense", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=4, d_ff=208, vocab=256,
+                       head_dim=16)

@@ -1,0 +1,20 @@
+"""DeepSeek-Coder-33B [arXiv:2401.14196]. Llama-arch dense decoder, GQA kv=8."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    n_layers=62,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=19200,
+    vocab=32256,
+    head_dim=128,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(name="deepseek-coder-33b-reduced", family="dense", n_layers=3,
+                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=192, vocab=256,
+                       head_dim=16)

@@ -1,0 +1,26 @@
+"""Hymba-1.5B [arXiv:2411.13676]. Hybrid blocks: attention heads and Mamba (SSM)
+heads run in PARALLEL inside each block and their outputs are fused.  Sliding-window
+attention + recurrent SSM state make long-context decode sub-quadratic."""
+from repro.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab=32001,
+    head_dim=64,
+    swa_window=1024,
+    ssm=SSMConfig(state_dim=16, expand=2),
+    subquadratic=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(name="hymba-1.5b-reduced", family="hybrid", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                       head_dim=16, swa_window=16,
+                       ssm=SSMConfig(state_dim=4, expand=2), subquadratic=True)

@@ -1,0 +1,25 @@
+"""Kimi-K2 1T-A32B [arXiv:2501.kimi2, paper-table]. Trillion-parameter MoE:
+384 experts, top-8 routing, small per-expert d_ff=2048.  At this scale the
+recommended TrainConfig uses bf16 optimizer state and GradES monitor="norm_delta"
+(O(1) monitoring memory per matrix); see DESIGN.md §2."""
+from repro.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=163840,
+    head_dim=112,
+    moe=MoEConfig(n_experts=384, top_k=8, d_ff=2048, group_size=512),
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(name="kimi-k2-1t-a32b-reduced", family="moe", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=32, vocab=256,
+                       head_dim=16,
+                       moe=MoEConfig(n_experts=8, top_k=2, d_ff=32, group_size=64))

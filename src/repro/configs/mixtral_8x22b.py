@@ -1,0 +1,26 @@
+"""Mixtral-8x22B [arXiv:2401.04088]. MoE decoder: 8 experts, top-2 routing,
+sliding-window attention (window 4096) => rolling KV cache, sub-quadratic decode."""
+from repro.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=32768,
+    head_dim=128,
+    swa_window=4096,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff=16384, group_size=2048),
+    subquadratic=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(name="mixtral-8x22b-reduced", family="moe", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                       head_dim=16, swa_window=16,
+                       moe=MoEConfig(n_experts=4, top_k=2, d_ff=128, group_size=64),
+                       subquadratic=True)

@@ -1,0 +1,20 @@
+"""Phi-3-medium-14B [arXiv:2404.14219]. Dense decoder, RoPE + SwiGLU + GQA."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium-14b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=10,
+    d_ff=17920,
+    vocab=100352,
+    head_dim=128,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(name="phi3-medium-14b-reduced", family="dense", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=1, d_ff=224, vocab=256,
+                       head_dim=16)

@@ -1,0 +1,21 @@
+"""Qwen3-0.6B — the paper's primary fine-tuning subject (Fig. 1, Table 1/4).
+Used by the paper-reproduction benchmarks; not part of the assigned 10-arch pool."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b",
+    family="dense",
+    n_layers=28,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=3072,
+    vocab=151936,
+    head_dim=128,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(name="qwen3-0.6b-reduced", family="dense", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=192, vocab=256,
+                       head_dim=16)

@@ -1,0 +1,25 @@
+"""Whisper-large-v3 backbone [arXiv:2212.04356]. Encoder-decoder; the conv audio
+frontend is a STUB per the assignment: ``input_specs()`` supplies precomputed frame
+embeddings of shape (batch, n_frames, d_model)."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="encdec",
+    n_layers=32,            # decoder layers
+    n_encoder_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab=51866,
+    head_dim=64,
+    mlp_act="gelu",
+    n_frames=1500,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(name="whisper-large-v3-reduced", family="encdec", n_layers=2,
+                       n_encoder_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                       d_ff=128, vocab=256, head_dim=16, mlp_act="gelu", n_frames=16)

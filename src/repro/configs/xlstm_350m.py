@@ -1,0 +1,24 @@
+"""xLSTM-350M [arXiv:2405.04517]. Alternating mLSTM (matrix-memory, parallelizable)
+and sLSTM (scalar-memory, recurrent) blocks; attention-free => long-context decode is
+O(1)-state.  d_ff=0 in the assignment: the feed-forward is the xLSTM block's own
+up/down projection (expand factor 2)."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="xlstm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    head_dim=256,
+    subquadratic=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(name="xlstm-350m-reduced", family="xlstm", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=4, d_ff=0, vocab=256,
+                       head_dim=16, subquadratic=True)

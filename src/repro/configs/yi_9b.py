@@ -1,0 +1,20 @@
+"""Yi-9B [arXiv:2403.04652]. Llama-arch dense decoder, GQA kv=4."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-9b",
+    family="dense",
+    n_layers=48,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=11008,
+    vocab=64000,
+    head_dim=128,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(name="yi-9b-reduced", family="dense", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=1, d_ff=176, vocab=256,
+                       head_dim=16)

@@ -1,0 +1,11 @@
+from repro.core.grades import (  # noqa: F401
+    GradESState,
+    MonitorSpec,
+    build_monitor_spec,
+    init_grades_state,
+    grades_update,
+    freeze_masks_for_params,
+    frozen_fraction,
+    all_frozen,
+)
+from repro.core.partition import fully_frozen_types, static_freeze_tree  # noqa: F401

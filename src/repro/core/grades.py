@@ -1,0 +1,220 @@
+"""GradES: per-matrix gradient-based early stopping (the paper's Algorithm 1).
+
+Terminology
+  *monitor group*  — one freeze decision unit.  Full fine-tuning: one weight matrix
+    per group (the paper's W_q..W_down).  LoRA: the (A, B) pair of one adapted
+    matrix (paper Eq. 3 monitors ||∇A||₁+||∇B||₁ jointly).
+  *granularity*    — layers are stacked (leading L axis; experts add an E axis), so
+    each group's freeze state is a (L,) or (L, E) boolean array, giving exactly the
+    paper's per-(layer, matrix) decisions while keeping the layer scan intact.
+
+The update is pure JAX (no host sync): freeze decisions are data-dependent booleans
+carried in :class:`GradESState`, applied as update masks by the optimizer (Tier 0 of
+DESIGN.md §2).  ``core/partition.py`` layers the static recompile tier on top.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import GradESConfig
+
+Path = Tuple[str, ...]
+
+
+def _flatten_with_paths(tree) -> Dict[Path, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, leaf in flat:
+        path = tuple(getattr(k, "key", getattr(k, "idx", str(k))) for k in kp)
+        out[path] = leaf
+    return out
+
+
+def get_path(tree, path: Path):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def set_path(tree, path: Path, value):
+    """Functional set on nested dicts."""
+    if len(path) == 1:
+        return {**tree, path[0]: value}
+    return {**tree, path[0]: set_path(tree[path[0]], path[1:], value)}
+
+
+@dataclass(frozen=True)
+class MonitorSpec:
+    """group name -> (param paths, granularity ndim)."""
+
+    groups: Mapping[str, Tuple[Tuple[Path, ...], int]]
+
+    def mask_shape(self, params, name: str) -> Tuple[int, ...]:
+        paths, gran = self.groups[name]
+        return get_path(params, paths[0]).shape[:gran]
+
+    def group_for_path(self, path: Path) -> Optional[str]:
+        for name, (paths, _) in self.groups.items():
+            if path in paths:
+                return name
+        return None
+
+
+def _is_monitored(path: Path, leaf) -> bool:
+    # Weight matrices inside stacked layer collections; norms/biases excluded.
+    in_layers = any("layers" in str(p) for p in path)
+    name = str(path[-1])
+    return in_layers and leaf.ndim >= 3 and not name.endswith("norm")
+
+
+def build_monitor_spec(params, *, lora: bool = False) -> MonitorSpec:
+    """Derive monitor groups from the parameter tree structure.
+
+    LoRA trees look like ``{"layers": {"wq": {"a": (L,din,r), "b": (L,r,dout)}}}`` —
+    the pair forms one group (paper Eq. 3).  Expert weights (L, E, d, f) get
+    granularity 2 = per-(layer, expert) freezing.
+    """
+    flat = _flatten_with_paths(params)
+    groups: Dict[str, Tuple[Tuple[Path, ...], int]] = {}
+    if lora:
+        pairs: Dict[Path, Dict[str, Path]] = {}
+        for path, leaf in flat.items():
+            if path[-1] in ("a", "b"):
+                pairs.setdefault(path[:-1], {})[path[-1]] = path
+        for base, ab in sorted(pairs.items()):
+            name = "/".join(map(str, base))
+            groups[name] = (tuple(ab[k] for k in sorted(ab)), 1)
+        return MonitorSpec(groups=groups)
+    for path, leaf in sorted(flat.items()):
+        if not _is_monitored(path, leaf):
+            continue
+        gran = 2 if leaf.ndim >= 4 and str(path[-1]) in (
+            "w_gate", "w_up", "w_down") and "router" not in path else 1
+        name = "/".join(map(str, path))
+        groups[name] = ((path,), gran)
+    return MonitorSpec(groups=groups)
+
+
+@dataclass
+class GradESState:
+    """Carried inside TrainState; a pure pytree (registered below)."""
+
+    step: jax.Array                       # int32 scalar
+    frozen: Dict[str, jax.Array]          # group -> bool (gran shape)
+    below: Dict[str, jax.Array]           # group -> int32 consecutive sub-tau count
+    prev: Any                             # delta mode: pytree of prev grads (monitored paths)
+    prev_norm: Dict[str, jax.Array]       # group -> float32 last norm (norm_delta mode)
+    last_norm: Dict[str, jax.Array]       # group -> float32 latest G_W(t) (for logging)
+
+
+jax.tree_util.register_dataclass(
+    GradESState, data_fields=["step", "frozen", "below", "prev", "prev_norm",
+                              "last_norm"], meta_fields=[])
+
+
+def init_grades_state(params, spec: MonitorSpec, cfg: GradESConfig) -> GradESState:
+    frozen = {}
+    below = {}
+    prev_norm = {}
+    last_norm = {}
+    prev = {}
+    for name, (paths, gran) in spec.groups.items():
+        shape = get_path(params, paths[0]).shape[:gran]
+        frozen[name] = jnp.zeros(shape, bool)
+        below[name] = jnp.zeros(shape, jnp.int32)
+        prev_norm[name] = jnp.zeros(shape, jnp.float32)
+        last_norm[name] = jnp.full(shape, jnp.inf, jnp.float32)
+        if cfg.monitor == "delta":
+            for p in paths:
+                prev[p] = jnp.zeros_like(get_path(params, p), jnp.bfloat16)
+    return GradESState(step=jnp.zeros((), jnp.int32), frozen=frozen, below=below,
+                       prev=prev, prev_norm=prev_norm, last_norm=last_norm)
+
+
+def _group_l1(g, gran: int, normalize: bool):
+    axes = tuple(range(gran, g.ndim))
+    s = jnp.sum(jnp.abs(g.astype(jnp.float32)), axis=axes)
+    if normalize:
+        n = 1
+        for a in axes:
+            n *= g.shape[a]
+        s = s / n
+    return s
+
+
+def grades_update(state: GradESState, grads, spec: MonitorSpec, cfg: GradESConfig,
+                  total_steps: int) -> Tuple[GradESState, Dict[str, jax.Array]]:
+    """One Algorithm-1 iteration.  Returns (new state, per-group freeze masks).
+
+    ``delta`` mode implements Eq. 1 exactly: G = ||∇W_t − ∇W_{t−1}||₁ (storing the
+    previous gradient, in bf16, sharded like the gradient).  ``norm_delta`` is the
+    beyond-paper O(1)-memory variant: G = | ||∇W_t||₁ − ||∇W_{t−1}||₁ |.
+    """
+    step = state.step + 1
+    grace = jnp.int32(jnp.ceil(cfg.alpha * total_steps))
+    active = (step > grace) & jnp.bool_(cfg.enabled)
+
+    new_frozen, new_below, new_prev, new_pn, new_ln = {}, {}, {}, {}, {}
+    for name, (paths, gran) in spec.groups.items():
+        if cfg.monitor == "delta":
+            norm = 0.0
+            for p in paths:
+                g = get_path(grads, p)
+                norm = norm + _group_l1(
+                    g.astype(jnp.float32) - state.prev[p].astype(jnp.float32),
+                    gran, cfg.normalize)
+                new_prev[p] = g.astype(jnp.bfloat16)
+            g_norm = norm
+        else:
+            norm = 0.0
+            for p in paths:
+                norm = norm + _group_l1(get_path(grads, p), gran, cfg.normalize)
+            g_norm = jnp.abs(norm - state.prev_norm[name])
+            new_pn[name] = jnp.asarray(norm, jnp.float32)
+        below_now = g_norm < cfg.tau_for(name)
+        count = jnp.where(below_now & active, state.below[name] + 1, 0)
+        newly = count >= cfg.patience
+        new_frozen[name] = state.frozen[name] | (newly & active)
+        new_below[name] = count
+        new_ln[name] = jnp.asarray(g_norm, jnp.float32)
+    if cfg.monitor == "delta":
+        new_pn = state.prev_norm
+    else:
+        new_prev = state.prev
+    new_state = GradESState(step=step, frozen=new_frozen, below=new_below,
+                            prev=new_prev, prev_norm=new_pn, last_norm=new_ln)
+    return new_state, new_frozen
+
+
+def freeze_masks_for_params(params, spec: MonitorSpec,
+                            frozen: Dict[str, jax.Array]):
+    """Broadcastable per-parameter masks (True = frozen), same tree as params."""
+    flat = _flatten_with_paths(params)
+    masks = {}
+    path_to_group = {}
+    for name, (paths, _) in spec.groups.items():
+        for p in paths:
+            path_to_group[p] = name
+    out = jax.tree.map(lambda x: None, params)
+    for path, leaf in flat.items():
+        g = path_to_group.get(path)
+        if g is None:
+            m = jnp.zeros((), bool)
+        else:
+            f = frozen[g]
+            m = f.reshape(f.shape + (1,) * (leaf.ndim - f.ndim))
+        out = set_path(out, path, m)
+    return out
+
+
+def frozen_fraction(frozen: Dict[str, jax.Array]) -> jax.Array:
+    tot = sum(f.size for f in frozen.values())
+    return sum(f.sum() for f in frozen.values()) / jnp.float32(max(tot, 1))
+
+
+def all_frozen(frozen: Dict[str, jax.Array]) -> jax.Array:
+    return jnp.asarray(frozen_fraction(frozen) >= 1.0)

@@ -1,0 +1,69 @@
+"""LoRA (paper §3.2): low-rank adapters + GradES in the low-rank space.
+
+The LoRA tree mirrors the base layer tree: for each targeted stacked matrix
+``W (L, d_in, d_out)`` we hold ``{"a": (L, d_in, r), "b": (L, r, d_out)}``; the
+effective weight is ``W + (alpha/r)·A@B``.  The base tree is a constant
+(``stop_gradient``) — only adapters train, and GradES monitors
+``||∇A||₁ + ||∇B||₁`` per (layer, matrix) group, freezing A and B together (Eq. 3/4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LoRAConfig, ModelConfig
+from repro.core.grades import _flatten_with_paths, get_path, set_path
+from repro.models.common import init_dense
+
+
+def init_lora_params(key, base_params, lcfg: LoRAConfig):
+    flat = _flatten_with_paths(base_params)
+    keys = jax.random.split(key, len(flat))
+    tree: Any = {}
+    for i, (path, leaf) in enumerate(sorted(flat.items())):
+        if str(path[-1]) not in lcfg.targets or leaf.ndim != 3:
+            continue  # only stacked (L, d_in, d_out) dense matrices are adapted
+        L, din, dout = leaf.shape
+        a = init_dense(keys[i], (L, din, lcfg.rank), dtype=str(leaf.dtype))
+        b = jnp.zeros((L, lcfg.rank, dout), leaf.dtype)
+        node = tree
+        for k in path[:-1]:
+            node = node.setdefault(k, {})
+        node[path[-1]] = {"a": a, "b": b}
+    return tree
+
+
+def merge_lora(base_params, lora_params, lcfg: LoRAConfig):
+    """Effective params: base (constant) + scaled A@B for adapted matrices."""
+    scale = lcfg.alpha / lcfg.rank
+    out = jax.lax.stop_gradient(base_params)
+    flat = _flatten_with_paths(lora_params)
+    pairs: Dict[tuple, Dict[str, Any]] = {}
+    for path, leaf in flat.items():
+        pairs.setdefault(path[:-1], {})[str(path[-1])] = leaf
+    for path, ab in pairs.items():
+        w = get_path(out, path)
+        delta = jnp.einsum("lir,lro->lio", ab["a"].astype(w.dtype),
+                           ab["b"].astype(w.dtype)) * scale
+        out = set_path(out, path, w + delta)
+    return out
+
+
+def lora_logical_axes(base_axes, lora_params):
+    """Adapters inherit the base matrix's fsdp/model axes on d_in/d_out; the rank
+    axis is unsharded."""
+    flat = _flatten_with_paths(lora_params)
+    tree: Any = {}
+    for path, leaf in flat.items():
+        base_ax = get_path(base_axes, path[:-1])
+        if str(path[-1]) == "a":
+            ax = (base_ax[0], base_ax[1], None)
+        else:
+            ax = (base_ax[0], None, base_ax[2])
+        node = tree
+        for k in path[:-1]:
+            node = node.setdefault(k, {})
+        node[path[-1]] = ax
+    return tree

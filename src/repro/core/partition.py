@@ -1,0 +1,54 @@
+"""Tier-1 static repartition (DESIGN.md §2).
+
+Once every (layer, expert) instance of a matrix *type* is frozen, the host re-jits
+``train_step`` with that type's stacked parameter wrapped in ``stop_gradient``: XLA
+then dead-code-eliminates the dW einsums for the type, shrinking the backward pass —
+the TPU-native analogue of ``requires_grad=False``.  The freeze sequence is monotone
+over at most #types recompiles (7 for the paper's set).
+
+``static_frozen`` is carried as a frozenset of group names and is a *static* jit
+argument: each distinct set is a distinct compiled executable.
+"""
+from __future__ import annotations
+
+from typing import AbstractSet, Dict, FrozenSet, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grades import MonitorSpec, get_path, set_path
+
+
+def fully_frozen_types(frozen_host: Dict[str, "np.ndarray"]) -> FrozenSet[str]:
+    """Host-side: groups whose every (layer, expert) instance is frozen.
+
+    ``frozen_host`` is the device ``state.grades.frozen`` pulled back with
+    ``jax.device_get`` (a few bools per matrix type — trivially cheap).
+    """
+    return frozenset(name for name, m in frozen_host.items() if bool(np.all(m)))
+
+
+def static_freeze_tree(params, spec: MonitorSpec,
+                       static_frozen: AbstractSet[str]):
+    """Apply stop_gradient to every param path of the statically-frozen groups."""
+    out = params
+    for name in sorted(static_frozen):
+        if name not in spec.groups:
+            continue
+        for path in spec.groups[name][0]:
+            out = set_path(out, path, jax.lax.stop_gradient(get_path(out, path)))
+    return out
+
+
+def trainable_mask(params, spec: MonitorSpec,
+                   static_frozen: AbstractSet[str]):
+    """Bool pytree: False for statically-frozen params (used to drop optimizer
+    state slots for frozen types — the Tier-1 memory saving)."""
+    mask = jax.tree.map(lambda _: True, params)
+    for name in sorted(static_frozen):
+        if name not in spec.groups:
+            continue
+        for path in spec.groups[name][0]:
+            mask = set_path(mask, path, False)
+    return mask

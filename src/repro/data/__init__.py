@@ -1,0 +1,6 @@
+from repro.data.pipeline import (  # noqa: F401
+    SyntheticTask,
+    make_batches,
+    batch_specs,
+    PackedFileDataset,
+)

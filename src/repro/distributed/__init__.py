@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingRules,
+    DEFAULT_RULES,
+    use_mesh,
+    active_mesh,
+    logical_constraint,
+    logical_to_spec,
+    named_sharding,
+)

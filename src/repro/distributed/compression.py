@@ -1,0 +1,43 @@
+"""int8 error-feedback gradient compression (cross-pod reduce; DESIGN.md §4).
+
+On a real multi-pod fabric the data-parallel gradient reduction crosses the slow
+inter-pod links; compressing to int8 with per-matrix scales cuts those bytes 4×
+(vs fp32 accumulate).  Under pjit the collective itself is XLA's, so we model the
+compression at the math level — quantize → dequantize with an error-feedback buffer
+so the quantization error is re-injected next step (Karimireddy et al. style), which
+keeps convergence unbiased.  The dry-run's collective-bytes term quantifies the
+saving when the reduce is performed on the int8 representation.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g.astype(jnp.float32))) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads: Any, error: Any) -> Tuple[Any, Any]:
+    """Returns (compressed-then-decompressed grads, new error buffers)."""
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    unflat = jax.tree_util.tree_unflatten
+    return (unflat(treedef, [o[0] for o in outs]),
+            unflat(treedef, [o[1] for o in outs]))

@@ -1,0 +1,61 @@
+"""jit'd public wrappers around the Pallas kernels, with shape canonicalization
+(ragged trailing dims are handled by reshaping to the (L, M, N) canonical layout;
+arbitrary-rank stacked parameters reduce over all non-leading axes)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import grades_norm as _gn
+from repro.kernels import masked_adamw as _ma
+
+
+def _canon3(x):
+    """(L, ...) -> (L, M, N) with N a multiple of 128 where possible."""
+    L = x.shape[0]
+    rest = int(x.size // L)
+    n = 128
+    while rest % n != 0 and n > 1:
+        n //= 2
+    return x.reshape(L, rest // n, n)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_m", "block_n"))
+def grades_norm(g, prev, *, interpret: bool = True, block_m: int = 256,
+                block_n: int = 512):
+    """Fused GradES monitor: (norm (L,), new_prev) for stacked (L, ...) grads."""
+    shape = g.shape
+    g3 = _canon3(g)
+    bm = min(block_m, g3.shape[1])
+    while g3.shape[1] % bm:
+        bm //= 2
+    bn = min(block_n, g3.shape[2])
+    while g3.shape[2] % bn:
+        bn //= 2
+    norm, new_prev = _gn.grades_norm_kernel(g3, _canon3(prev), block_m=max(bm, 1),
+                                            block_n=max(bn, 1),
+                                            interpret=interpret)
+    return norm, new_prev.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "lr", "b1", "b2", "eps",
+                                             "weight_decay", "count"))
+def masked_adamw(p, g, m, v, frozen, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0, count=1, interpret: bool = True):
+    shape = p.shape
+    c3 = _canon3
+    bm, bn = 256, 512
+    p3 = c3(p)
+    bm = min(bm, p3.shape[1])
+    while p3.shape[1] % bm:
+        bm //= 2
+    bn = min(bn, p3.shape[2])
+    while p3.shape[2] % bn:
+        bn //= 2
+    outs = _ma.masked_adamw_kernel(
+        p3, c3(g), c3(m), c3(v), frozen, lr=lr, b1=b1, b2=b2, eps=eps,
+        weight_decay=weight_decay, count=count, block_m=max(bm, 1),
+        block_n=max(bn, 1), interpret=interpret)
+    return tuple(o.reshape(shape) for o in outs)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the tests' ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grades_norm_ref(g, prev):
+    """(L,M,N) -> (norm (L,), new_prev)."""
+    delta = g.astype(jnp.float32) - prev.astype(jnp.float32)
+    norm = jnp.sum(jnp.abs(delta), axis=(1, 2))
+    return norm, g.astype(prev.dtype)
+
+
+def masked_adamw_ref(p, g, m, v, frozen, *, lr, b1, b2, eps, weight_decay, count):
+    live = ~frozen.astype(bool)
+    lv = live[:, None, None]
+    g32 = g.astype(jnp.float32)
+    m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+    m_new = jnp.where(lv, b1 * m32 + (1 - b1) * g32, m32)
+    v_new = jnp.where(lv, b2 * v32 + (1 - b2) * g32 * g32, v32)
+    mhat = m_new / (1 - b1 ** count)
+    vhat = v_new / (1 - b2 ** count)
+    p32 = p.astype(jnp.float32)
+    p_new = jnp.where(lv, p32 - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p32),
+                      p32)
+    return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q: (B,S,H,hd), k/v: (B,T,H,hd) (MHA layout used by the kernel)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bshd,bthd->bhst", q, k, preferred_element_type=jnp.float32) * scale
+    if causal:
+        S, T = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((S, T), bool), T - S)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", p.astype(v.dtype), v)

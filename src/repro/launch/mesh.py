@@ -1,0 +1,37 @@
+"""Production mesh definitions.
+
+Functions, not module-level constants, so importing this module never touches jax
+device state (jax locks the device count on first backend init — see dryrun.py).
+
+Single pod  : (data=16, model=16)            = 256 chips (one v5e pod)
+Multi-pod   : (pod=2, data=16, model=16)     = 512 chips; the leading "pod" axis
+              carries the slow inter-pod links — batch shards over (pod, data),
+              gradient reduction over "pod" is the compressed cross-pod reduce.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.sharding import DEFAULT_RULES, MULTIPOD_RULES, ShardingRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) > n:  # 512 placeholder devices, single-pod mesh uses first 256
+        import numpy as np
+        dev = np.asarray(devices[:n]).reshape(shape)
+        return jax.sharding.Mesh(dev, axes)
+    return jax.make_mesh(shape, axes)
+
+
+def rules_for(mesh) -> ShardingRules:
+    return MULTIPOD_RULES if "pod" in mesh.axis_names else DEFAULT_RULES
+
+
+def chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,187 @@
+"""ShapeDtypeStruct stand-ins + shardings for every dry-run cell.
+
+Nothing here allocates: model/optimizer/GradES state shapes come from
+``jax.eval_shape`` over the real init functions, and shardings are resolved from
+the logical-axis trees against the target mesh (divisibility-checked, DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import GradESConfig, ModelConfig, ShapeCell, TrainConfig
+from repro.core.grades import _flatten_with_paths, build_monitor_spec
+from repro.data.pipeline import batch_specs
+from repro.distributed.sharding import ShardingRules, logical_to_spec
+from repro.launch.mesh import rules_for
+from repro.models import model
+from repro.train.state import init_train_state
+
+
+def dryrun_model_cfg(cfg: ModelConfig, *, model_size: int = 16,
+                     seq_parallel: bool = True) -> ModelConfig:
+    """Full configs are lowered in bf16 params (fine-tune-at-scale convention).
+
+    ``seq_parallel``: enable sequence-parallel attention for archs whose head
+    counts don't divide the TP axis (§Perf iteration 1); pass False to reproduce
+    the recorded baseline.
+    """
+    sp = seq_parallel and (cfg.n_heads % model_size != 0
+                           or cfg.n_kv_heads % model_size != 0)
+    return dataclasses.replace(cfg, param_dtype="bfloat16", dtype="bfloat16",
+                               seq_parallel_attn=sp)
+
+
+def dryrun_train_cfg(cfg: ModelConfig, cell: ShapeCell,
+                     microbatch: bool = False) -> TrainConfig:
+    huge = cfg.param_count() > 5e10
+    return TrainConfig(
+        seq_len=cell.seq_len,
+        global_batch=cell.global_batch,
+        # §Perf iteration 1c: 4-way gradient accumulation bounds live activations
+        # so big-arch train cells fit 16 GiB HBM (temp_bytes in memory_analysis).
+        microbatch=cell.global_batch // 4 if microbatch else 0,
+        steps=1000,
+        remat="full",
+        opt_state_dtype="bfloat16" if huge else "float32",
+        grades=GradESConfig(enabled=True, monitor="norm_delta" if huge else "delta"),
+    )
+
+
+def _shard_tree(sds_tree, axes_tree, mesh, rules):
+    def one(sds, ax):
+        spec = logical_to_spec(ax, shape=sds.shape, mesh=mesh, rules=rules)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, sds_tree, axes_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _replicated_like(tree, mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def with_sharding(sds_tree, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        sds_tree, shardings)
+
+
+# ---------------------------------------------------------------------------
+# Train cell
+# ---------------------------------------------------------------------------
+
+def train_cell_specs(cfg: ModelConfig, tcfg: TrainConfig, mesh, rules=None):
+    """Returns (state_sds, batch_sds) with shardings attached."""
+    rules = rules or rules_for(mesh)
+    key = jax.random.PRNGKey(0)
+    state_sds = jax.eval_shape(
+        lambda k: init_train_state(k, cfg, tcfg), key)
+
+    msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    axes = model.param_logical_axes(cfg, msize)
+    params_sh = _shard_tree(state_sds.params, axes, mesh, rules)
+    flat_param_sh = _flatten_with_paths(params_sh)
+    opt_m_sh = jax.tree.map(
+        lambda s, sh: sh if s.ndim > 1 else NamedSharding(mesh, P()),
+        state_sds.opt.m, params_sh)
+    opt_v_sh = jax.tree.map(
+        lambda s, sh: sh if s.ndim > 1 else NamedSharding(mesh, P()),
+        state_sds.opt.v, params_sh)
+    prev_sh = {path: flat_param_sh[path]
+               for path in state_sds.grades.prev}
+    grades_sh = type(state_sds.grades)(
+        step=NamedSharding(mesh, P()),
+        frozen=_replicated_like(state_sds.grades.frozen, mesh),
+        below=_replicated_like(state_sds.grades.below, mesh),
+        prev=prev_sh,
+        prev_norm=_replicated_like(state_sds.grades.prev_norm, mesh),
+        last_norm=_replicated_like(state_sds.grades.last_norm, mesh),
+    )
+    state_sh = type(state_sds)(
+        step=NamedSharding(mesh, P()),
+        params=params_sh,
+        base_params=None,
+        opt=type(state_sds.opt)(count=NamedSharding(mesh, P()),
+                                m=opt_m_sh, v=opt_v_sh),
+        grades=grades_sh,
+        ef_error=None,
+    )
+
+    b_sds = batch_specs(cfg, tcfg.global_batch, tcfg.seq_len)
+    b_sh = {k: NamedSharding(mesh, logical_to_spec(
+        ("batch",) + (None,) * (len(v.shape) - 1), shape=v.shape, mesh=mesh,
+        rules=rules)) for k, v in b_sds.items()}
+    return (with_sharding(state_sds, state_sh),
+            {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=b_sh[k])
+             for k, v in b_sds.items()},
+            state_sh, b_sh)
+
+
+# ---------------------------------------------------------------------------
+# Serve cells (prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _cache_axes(cfg: ModelConfig, cache_sds) -> Any:
+    if cfg.family == "xlstm":
+        b = ("batch",)
+        m_ax = type(cache_sds["m"])(c=(None, "batch", "heads", None, None),
+                                    n=(None, "batch", "heads", None),
+                                    m=(None, "batch", None))
+        s_ax = type(cache_sds["s"])(c=(None, "batch", None),
+                                    n=(None, "batch", None),
+                                    h=(None, "batch", None),
+                                    m=(None, "batch", None))
+        return {"m": m_ax, "s": s_ax, "pos": ()}
+    axes: Dict[str, Any] = {
+        "k": (None, "batch", None, "kv_heads", None),
+        "v": (None, "batch", None, "kv_heads", None),
+        "pos": (),
+    }
+    if cfg.family == "encdec":
+        axes["ck"] = (None, "batch", None, "kv_heads", None)
+        axes["cv"] = (None, "batch", None, "kv_heads", None)
+    if cfg.ssm is not None:
+        axes["ssm_h"] = (None, "batch", "ssm_inner", None)
+        axes["ssm_conv"] = (None, "batch", None, "ssm_inner")
+    return axes
+
+
+def serve_cell_specs(cfg: ModelConfig, cell: ShapeCell, mesh, rules=None):
+    """Returns sharded SDS for (params, cache, tokens[, frames])."""
+    rules = rules or rules_for(mesh)
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(lambda k: model.init_params(k, cfg), key)
+    msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    params_sh = _shard_tree(params_sds, model.param_logical_axes(cfg, msize), mesh,
+                            rules)
+
+    B = cell.global_batch
+    if cell.kind == "prefill":
+        tok = jax.ShapeDtypeStruct((B, cell.seq_len), jnp.int32)
+        args = {"tokens": tok}
+        if cfg.family == "encdec":
+            args["frames"] = jax.ShapeDtypeStruct((B, cfg.n_frames, cfg.d_model),
+                                                  jnp.bfloat16)
+        args_sh = {k: NamedSharding(mesh, logical_to_spec(
+            ("batch",) + (None,) * (len(v.shape) - 1), shape=v.shape, mesh=mesh,
+            rules=rules)) for k, v in args.items()}
+        return (with_sharding(params_sds, params_sh), params_sh,
+                {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=args_sh[k])
+                 for k, v in args.items()}, args_sh, None, None)
+
+    # decode: cache prefilled to seq_len, one new token
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(None, cfg, B, cell.seq_len))
+    cache_ax = _cache_axes(cfg, cache_sds)
+    cache_sh = _shard_tree(cache_sds, cache_ax, mesh, rules)
+    tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, logical_to_spec(("batch", None),
+                                                 shape=(B, 1), mesh=mesh,
+                                                 rules=rules))
+    return (with_sharding(params_sds, params_sh), params_sh,
+            jax.ShapeDtypeStruct(tok_sds.shape, tok_sds.dtype, sharding=tok_sh),
+            tok_sh, with_sharding(cache_sds, cache_sh), cache_sh)

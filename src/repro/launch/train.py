@@ -1,0 +1,90 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-9b --reduced \
+        --steps 100 --grades-tau 4e-3
+
+On a real TPU cluster this process runs once per host (jax.distributed
+initialization is env-driven); the mesh comes from launch/mesh.py and every
+(arch × shape) from the assignment is selectable via --arch/--shape.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+import repro.configs as configs
+from repro.config import SHAPES, GradESConfig, LoRAConfig, TrainConfig
+from repro.distributed.sharding import use_mesh
+from repro.launch.mesh import make_production_mesh, rules_for
+from repro.train.loop import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU dev); default is the full arch")
+    ap.add_argument("--shape", choices=list(SHAPES), default=None,
+                    help="use an assigned shape cell for seq/batch")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--lora-rank", type=int, default=0)
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgd"])
+    ap.add_argument("--remat", default="none", choices=["none", "dots", "full"])
+    ap.add_argument("--grades", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--grades-tau", type=float, default=4e-3)
+    ap.add_argument("--grades-alpha", type=float, default=0.5)
+    ap.add_argument("--grades-monitor", default="delta",
+                    choices=["delta", "norm_delta"])
+    ap.add_argument("--val-es", action="store_true",
+                    help="classic validation early stopping baseline")
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--mesh", choices=["none", "single", "multi"], default="none")
+    ap.add_argument("--log", default="")
+    args = ap.parse_args()
+
+    cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
+    seq, batch = args.seq, args.batch
+    if args.shape:
+        cell = SHAPES[args.shape]
+        seq, batch = cell.seq_len, cell.global_batch
+    tcfg = TrainConfig(
+        seq_len=seq, global_batch=batch, steps=args.steps, lr=args.lr,
+        optimizer=args.optimizer, remat=args.remat,
+        lora=LoRAConfig(rank=args.lora_rank) if args.lora_rank else None,
+        val_es=args.val_es,
+        checkpoint_dir=args.ckpt, checkpoint_every=args.ckpt_every,
+        grades=GradESConfig(enabled=args.grades, tau=args.grades_tau,
+                            alpha=args.grades_alpha, normalize=True,
+                            monitor=args.grades_monitor, patience=2),
+    )
+    trainer = Trainer(cfg, tcfg, log_every=10, log_path=args.log or None)
+
+    def run():
+        val = None
+        if args.val_es:
+            from repro.data.pipeline import make_batches
+            val = list(make_batches(cfg, tcfg, steps=4, seed_offset=777))
+        return trainer.train(val_batches=val)
+
+    if args.mesh != "none":
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        with use_mesh(mesh, rules_for(mesh)):
+            res = run()
+    else:
+        res = run()
+    print(json.dumps({
+        "arch": cfg.name, "stop": res.stop_reason, "steps": res.steps_run,
+        "wall_s": round(res.wall_time, 2), "recompiles": res.recompiles,
+        "final": res.history[-1] if res.history else None}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

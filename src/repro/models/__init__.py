@@ -1,0 +1,9 @@
+from repro.models.model import (  # noqa: F401
+    init_params,
+    loss_fn,
+    forward,
+    init_cache,
+    prefill,
+    decode_step,
+    param_logical_axes,
+)

@@ -1,0 +1,146 @@
+"""Attention: GQA with RoPE, full / blockwise(flash-style) / decode paths.
+
+Layout conventions
+  q        : (B, S, KV, G, hd)   G = n_heads // n_kv_heads (grouped query heads)
+  k, v     : (B, T, KV, hd)
+  output   : (B, S, KV, G, hd)
+
+The blockwise path is an online-softmax (flash-attention) formulation in pure JAX:
+a ``lax.scan`` over query chunks with an inner ``fori_loop`` over KV chunks carrying
+(running max, running denominator, accumulator).  It bounds the score tensor at
+(q_chunk × kv_chunk) regardless of sequence length, which is what makes the 32k/500k
+shape cells lowerable; the Pallas flash kernel (kernels/flash_attention.py) is the
+TPU-optimized version of the same schedule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int):
+    """(..., S, T) additive bias from positions."""
+    ok = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        ok &= k_pos[..., None, :] <= q_pos[..., :, None]
+    if window:
+        ok &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def full_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                   q_offset=0, kv_valid: Optional[jax.Array] = None):
+    """Materializes the (S, T) score matrix — use for S·T small enough."""
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    scale = hd ** -0.5
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(S)
+    k_pos = jnp.arange(T)
+    bias = _mask_bias(q_pos, k_pos, causal=causal, window=window)
+    scores = scores + bias
+    if kv_valid is not None:  # (B, T) mask for padded cache slots
+        scores = jnp.where(kv_valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgst,btkh->bskgh", probs, v)
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Flash-style online-softmax attention; O(q_chunk·kv_chunk) score memory."""
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    assert S % q_chunk == 0 and T % kv_chunk == 0
+    nq, nkv = S // q_chunk, T // kv_chunk
+    scale = hd ** -0.5
+
+    qs = q.reshape(B, nq, q_chunk, KV, G, hd)
+    ks = k.reshape(B, nkv, kv_chunk, KV, hd)
+    vs = v.reshape(B, nkv, kv_chunk, KV, hd)
+
+    def q_block(carry, inp):
+        qi, qb = inp  # index, (B, qc, KV, G, hd)
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, KV, G, hd), jnp.float32)
+
+        def kv_block(ki, state):
+            m, l, acc = state
+            kb = jax.lax.dynamic_index_in_dim(ks, ki, 1, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vs, ki, 1, keepdims=False)
+            s = jnp.einsum("bskgh,btkh->bkgst", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            q_pos = qi * q_chunk + jnp.arange(q_chunk)
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = s + _mask_bias(q_pos, k_pos, causal=causal, window=window)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+                "bkgst,btkh->bskgh", p, vb, preferred_element_type=jnp.float32)
+            return m_new, l_new, acc
+
+        # Causal/window structure: KV blocks strictly after the query block never
+        # contribute; lax.fori_loop upper bound is dynamic in qi, skipping them.
+        upper = nkv if not causal else jnp.minimum(
+            nkv, ((qi + 1) * q_chunk + kv_chunk - 1) // kv_chunk)
+        upper = jnp.maximum(upper, 1)
+        lower = 0
+        if window:  # blocks entirely before the window never contribute
+            lower = jnp.maximum(0, (qi * q_chunk - window) // kv_chunk)
+        m, l, acc = jax.lax.fori_loop(lower, upper, kv_block, (m0, l0, a0))
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return carry, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_block, None, (jnp.arange(nq), qs.transpose(1, 0, 2, 3, 4, 5)))
+    return blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, KV, G, hd)
+
+
+def decode_attention(q, k_cache, v_cache, *, length, window: int = 0):
+    """Single-position query against a (possibly rolling) cache.
+
+    q: (B, 1, KV, G, hd); caches: (B, C, KV, hd) where C = max_len or window.
+    ``length`` (B,)-broadcastable count of valid tokens written so far.
+    """
+    B, _, KV, G, hd = q.shape
+    C = k_cache.shape[1]
+    scale = hd ** -0.5
+    s = jnp.einsum("bskgh,btkh->bkgst", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    slot = jnp.arange(C)
+    length = jnp.asarray(length).reshape(-1)
+    valid = slot[None, :] < jnp.minimum(length, C)[:, None]       # (B, C)
+    if window:
+        # rolling buffer: all C=window slots valid once warm; handled by the min().
+        pass
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgst,btkh->bskgh", p, v_cache)
+
+
+def _divisor_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (ragged lengths, e.g. 1500 frames)."""
+    c = min(n, target)
+    while n % c:
+        c -= 1
+    return c
+
+
+def attention(q, k, v, *, causal=True, window=0, chunk_threshold: int = 8192,
+              q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Dispatch: full attention for short sequences, blockwise beyond."""
+    S, T = q.shape[1], k.shape[1]
+    if max(S, T) > chunk_threshold:
+        return blockwise_attention(q, k, v, causal=causal, window=window,
+                                   q_chunk=_divisor_chunk(S, q_chunk),
+                                   kv_chunk=_divisor_chunk(T, kv_chunk))
+    return full_attention(q, k, v, causal=causal, window=window)

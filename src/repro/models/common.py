@@ -1,0 +1,60 @@
+"""Shared building blocks: norms, RoPE, initializers, activation sharding hints."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import logical_constraint
+
+
+def cast(x, dtype: str):
+    return x.astype(jnp.dtype(dtype))
+
+
+def rms_norm(x, scale, eps: float):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def init_dense(key, shape, in_axis: int = -2, dtype: str = "float32"):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[in_axis]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std
+            ).astype(jnp.dtype(dtype))
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta))            # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                          # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return y.astype(x.dtype)
+
+
+def shard_batch(x):
+    """Hint: leading axis is the (pod, data)-sharded batch."""
+    return logical_constraint(x, ("batch",) + (None,) * (x.ndim - 1))
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token CE in fp32. labels == -1 are ignored."""
+    logits = logits.astype(jnp.float32)
+    valid = (labels >= 0) if mask is None else mask
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)

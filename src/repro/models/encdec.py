@@ -1,0 +1,209 @@
+"""Encoder–decoder stack (Whisper-style backbone).
+
+The audio conv frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings ``frames: (B, n_frames, d_model)`` supplied by
+``input_specs()``.  Encoder = bidirectional self-attention + GELU MLP; decoder =
+causal self-attention + cross-attention + GELU MLP.  Both stacks are scanned.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models import attention as attn_lib
+from repro.models.common import apply_rope, init_dense, rms_norm, shard_batch
+from repro.models.mlp import gelu_mlp
+from repro.models.transformer import _qkv
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = cfg.param_dtype
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = iter(jax.random.split(key, 24))
+    Le, Ld = cfg.n_encoder_layers, cfg.n_layers
+
+    def attn(L):
+        return {
+            "attn_norm": jnp.zeros((L, d), jnp.dtype(dtype)),
+            "wq": init_dense(next(ks), (L, d, qd), dtype=dtype),
+            "wk": init_dense(next(ks), (L, d, kvd), dtype=dtype),
+            "wv": init_dense(next(ks), (L, d, kvd), dtype=dtype),
+            "wo": init_dense(next(ks), (L, qd, d), dtype=dtype),
+        }
+
+    def mlp(L):
+        return {
+            "mlp_norm": jnp.zeros((L, d), jnp.dtype(dtype)),
+            "w_up": init_dense(next(ks), (L, d, cfg.d_ff), dtype=dtype),
+            "w_down": init_dense(next(ks), (L, cfg.d_ff, d), dtype=dtype),
+        }
+
+    dec = {**attn(Ld), **mlp(Ld)}
+    dec.update({
+        "cross_norm": jnp.zeros((Ld, d), jnp.dtype(dtype)),
+        "cq": init_dense(next(ks), (Ld, d, qd), dtype=dtype),
+        "ck": init_dense(next(ks), (Ld, d, kvd), dtype=dtype),
+        "cv": init_dense(next(ks), (Ld, d, kvd), dtype=dtype),
+        "co": init_dense(next(ks), (Ld, qd, d), dtype=dtype),
+    })
+    return {
+        "embed": init_dense(next(ks), (cfg.vocab, d), in_axis=-1, dtype=dtype),
+        "enc_layers": {**attn(Le), **mlp(Le)},
+        "layers": dec,
+        "enc_final_norm": jnp.zeros((d,), jnp.dtype(dtype)),
+        "final_norm": jnp.zeros((d,), jnp.dtype(dtype)),
+        "lm_head": init_dense(next(ks), (d, cfg.vocab), dtype=dtype),
+    }
+
+
+def param_logical_axes(cfg: ModelConfig, model_size=None) -> Dict[str, Any]:
+    tp = model_size is None or (cfg.n_heads % model_size == 0
+                                and cfg.n_kv_heads % model_size == 0)
+    qax = "qdim" if tp else None
+    kvax = "kvdim" if tp else None
+    attn = {
+        "attn_norm": (None, None),
+        "wq": (None, "fsdp", qax), "wk": (None, "fsdp", kvax),
+        "wv": (None, "fsdp", kvax), "wo": (None, qax, "fsdp"),
+    }
+    mlp = {"mlp_norm": (None, None), "w_up": (None, "fsdp", "ffn"),
+           "w_down": (None, "ffn", "fsdp")}
+    dec = {**attn, **mlp,
+           "cross_norm": (None, None),
+           "cq": (None, "fsdp", qax), "ck": (None, "fsdp", kvax),
+           "cv": (None, "fsdp", kvax), "co": (None, qax, "fsdp")}
+    return {
+        "embed": ("vocab", "fsdp"),
+        "enc_layers": {**attn, **mlp},
+        "layers": dec,
+        "enc_final_norm": (None,),
+        "final_norm": (None,),
+        "lm_head": ("fsdp", "vocab"),
+    }
+
+
+def _cast(lp, dtype):
+    return jax.tree.map(lambda a: a.astype(dtype)
+                        if jnp.issubdtype(a.dtype, jnp.floating) else a, lp)
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, F, D) stub embeddings -> encoder states (B, F, D)."""
+    x = shard_batch(frames.astype(cfg.dtype))
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, lp):
+        lp = _cast(lp, cfg.dtype)
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(h, lp, cfg, positions)
+        o = attn_lib.attention(q, k, v, causal=False)
+        x = x + o.reshape(x.shape[:2] + (cfg.q_dim,)) @ lp["wo"]
+        h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        x = x + gelu_mlp(h, lp["w_up"], lp["w_down"])
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_final_norm"].astype(cfg.dtype), cfg.norm_eps)
+
+
+def _decoder_stack(params, cfg: ModelConfig, x, enc_out, positions, *,
+                   collect_cache: bool, self_cache=None, slot=None, length=None):
+    """Shared by training forward, prefill, and decode (cache args set => decode)."""
+    B, S = x.shape[:2]
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    decode = self_cache is not None
+    xs: Dict[str, Any] = {"lp": params["layers"]}
+    if decode:
+        xs["k"], xs["v"] = self_cache["k"], self_cache["v"]
+        xs["ck"], xs["cv"] = self_cache["ck"], self_cache["cv"]
+
+    def body(x, layer_in):
+        lp = _cast(layer_in["lp"], cfg.dtype)
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(h, lp, cfg, positions)
+        ys = {}
+        if decode:
+            kc = jax.lax.dynamic_update_slice_in_dim(layer_in["k"], k, slot, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(layer_in["v"], v, slot, axis=1)
+            o = attn_lib.decode_attention(q, kc, vc, length=length)
+            ck, cv = layer_in["ck"], layer_in["cv"]
+            ys.update({"k": kc, "v": vc, "ck": ck, "cv": cv})
+        else:
+            o = attn_lib.attention(q, k, v, causal=True)
+            if collect_cache:
+                ys.update({"k": k, "v": v})
+        x = x + o.reshape(B, S, cfg.q_dim) @ lp["wo"]
+        # cross attention
+        h = rms_norm(x, lp["cross_norm"], cfg.norm_eps)
+        cq = (h @ lp["cq"]).reshape(B, S, KV, -1, hd)
+        if decode:
+            ck_, cv_ = ys["ck"], ys["cv"]
+        else:
+            ck_ = (enc_out @ lp["ck"]).reshape(B, -1, KV, hd)
+            cv_ = (enc_out @ lp["cv"]).reshape(B, -1, KV, hd)
+            if collect_cache:
+                ys.update({"ck": ck_, "cv": cv_})
+        o = attn_lib.attention(cq, ck_, cv_, causal=False)
+        x = x + o.reshape(B, S, cfg.q_dim) @ lp["co"]
+        h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        x = shard_batch(x + gelu_mlp(h, lp["w_up"], lp["w_down"]))
+        return x, ys
+
+    x, ys = jax.lax.scan(body, x, xs)
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(cfg.dtype)
+    logits = logical_constraint(logits, ("batch", None, "vocab"))
+    return logits, ys
+
+
+def forward(params, cfg: ModelConfig, tokens, frames, *, remat: str = "none"):
+    enc_out = encode(params, cfg, frames)
+    x = shard_batch(params["embed"].astype(cfg.dtype)[tokens])
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    logits, _ = _decoder_stack(params, cfg, x, enc_out, positions,
+                               collect_cache=False)
+    return logits, jnp.float32(0)
+
+
+def init_cache(params, cfg: ModelConfig, batch: int, max_len: int):
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((L, batch, max_len, KV, hd), cfg.dtype),
+        "v": jnp.zeros((L, batch, max_len, KV, hd), cfg.dtype),
+        "ck": jnp.zeros((L, batch, cfg.n_frames, KV, hd), cfg.dtype),
+        "cv": jnp.zeros((L, batch, cfg.n_frames, KV, hd), cfg.dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg: ModelConfig, tokens, frames, max_len: int):
+    enc_out = encode(params, cfg, frames)
+    x = shard_batch(params["embed"].astype(cfg.dtype)[tokens])
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    logits, ys = _decoder_stack(params, cfg, x, enc_out, positions,
+                                collect_cache=True)
+    k, v = ys["k"], ys["v"]
+    if S < max_len:
+        zeros = jnp.zeros(k.shape[:2] + (max_len - S,) + k.shape[3:], k.dtype)
+        k = jnp.concatenate([k, zeros], axis=2)
+        v = jnp.concatenate([v, zeros], axis=2)
+    return logits, {"k": k, "v": v, "ck": ys["ck"], "cv": ys["cv"],
+                    "pos": jnp.int32(S)}
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    logits, ys = _decoder_stack(
+        params, cfg, x, None, positions, collect_cache=False,
+        self_cache=cache, slot=jnp.minimum(pos, cache["k"].shape[2] - 1),
+        length=pos + 1)
+    return logits, {"k": ys["k"], "v": ys["v"], "ck": ys["ck"], "cv": ys["cv"],
+                    "pos": pos + 1}

@@ -1,0 +1,19 @@
+"""Dense feed-forward blocks (SwiGLU / GELU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = logical_constraint(h, ("batch", None, "ffn"))
+    return h @ w_down
+
+
+def gelu_mlp(x, w_up, w_down):
+    h = jax.nn.gelu(x @ w_up)
+    h = logical_constraint(h, ("batch", None, "ffn"))
+    return h @ w_down

@@ -1,0 +1,64 @@
+"""Model dispatcher: one API across all families.
+
+    init_params(key, cfg)                        -> params pytree
+    loss_fn(params, batch, cfg, remat=...)       -> (loss, metrics)
+    forward(params, cfg, batch)                  -> logits
+    init_cache / prefill / decode_step           -> serving path
+    param_logical_axes(cfg)                      -> logical sharding tree
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import encdec, transformer, xlstm_stack
+from repro.models.common import cross_entropy
+
+
+def _mod(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec
+    if cfg.family == "xlstm":
+        return xlstm_stack
+    return transformer
+
+
+def init_params(key, cfg: ModelConfig):
+    return _mod(cfg).init_params(key, cfg)
+
+
+def param_logical_axes(cfg: ModelConfig, model_size=None):
+    return _mod(cfg).param_logical_axes(cfg, model_size)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *, remat: str = "none"):
+    if cfg.family == "encdec":
+        logits, aux = encdec.forward(params, cfg, batch["tokens"], batch["frames"],
+                                     remat=remat)
+    else:
+        logits, aux = _mod(cfg).forward(params, cfg, batch["tokens"], remat=remat)
+    return logits, aux
+
+
+def loss_fn(params, batch: Dict[str, Any], cfg: ModelConfig, *, remat: str = "none"):
+    logits, aux = forward(params, cfg, batch, remat=remat)
+    ce = cross_entropy(logits, batch["labels"])
+    loss = ce + aux
+    return loss, {"loss": loss, "ce": ce, "aux_loss": aux}
+
+
+def init_cache(params, cfg: ModelConfig, batch: int, max_len: int):
+    return _mod(cfg).init_cache(params, cfg, batch, max_len)
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], max_len: int):
+    if cfg.family == "encdec":
+        return encdec.prefill(params, cfg, batch["tokens"], batch["frames"], max_len)
+    return _mod(cfg).prefill(params, cfg, batch["tokens"], max_len)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    return _mod(cfg).decode_step(params, cfg, cache, tokens)

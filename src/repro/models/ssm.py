@@ -1,0 +1,104 @@
+"""Selective SSM (Mamba/S6) head for hybrid blocks.
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel becomes a *chunked
+associative scan* — ``lax.scan`` over time chunks with a ``lax.associative_scan``
+inside each chunk.  Chunking bounds the materialized (B, Q, Di, N) state tensor while
+keeping O(log Q) depth within chunks; the cross-chunk carry is a single (B, Di, N)
+state, which is also exactly the decode-time state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import logical_constraint
+
+
+def init_ssm_params(key, cfg: ModelConfig, n_layers: int, dtype: str):
+    from repro.models.common import init_dense
+    s = cfg.ssm
+    d, di, dtr, n = cfg.d_model, cfg.ssm.expand * cfg.d_model, cfg.dt_rank, s.state_dim
+    ks = jax.random.split(key, 6)
+    L = n_layers
+    return {
+        "ssm_in": init_dense(ks[0], (L, d, 2 * di), dtype=dtype),
+        "ssm_conv": init_dense(ks[1], (L, s.conv_width, di), in_axis=-2, dtype=dtype),
+        "ssm_x": init_dense(ks[2], (L, di, dtr + 2 * n), dtype=dtype),
+        "ssm_dt": init_dense(ks[3], (L, dtr, di), dtype=dtype),
+        "ssm_a_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)), (L, di, n)
+        ).astype(jnp.dtype(dtype)) * jnp.ones((L, di, n), jnp.dtype(dtype)),
+        "ssm_skip": jnp.ones((L, di), jnp.dtype(dtype)),
+        "ssm_out": init_dense(ks[4], (L, di, d), dtype=dtype),
+    }
+
+
+def _compose(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, a2 * b1 + b2
+
+
+def _chunked_scan(a, bx, c_coef, h0, chunk: int):
+    """h_t = a_t*h_{t-1} + bx_t;   y_t = <h_t, c_t>.   a/bx: (B,T,Di,N), c: (B,T,N)."""
+    B, T, Di, N = a.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    nc = T // chunk
+    a_c = a.reshape(B, nc, chunk, Di, N).transpose(1, 0, 2, 3, 4)
+    b_c = bx.reshape(B, nc, chunk, Di, N).transpose(1, 0, 2, 3, 4)
+    c_c = c_coef.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+
+    def step(h, inp):
+        ai, bi, ci = inp
+        A_cum, B_cum = jax.lax.associative_scan(_compose, (ai, bi), axis=1)
+        h_all = A_cum * h[:, None] + B_cum                    # (B, Q, Di, N)
+        y = jnp.einsum("bqdn,bqn->bqd", h_all, ci)
+        return h_all[:, -1], y
+
+    h_last, ys = jax.lax.scan(step, h0, (a_c, b_c, c_c))
+    return ys.transpose(1, 0, 2, 3).reshape(B, T, -1), h_last
+
+
+def _causal_conv(x, kernel, conv_state=None):
+    """Depthwise causal conv. x: (B,T,Di), kernel: (W,Di)."""
+    W = kernel.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state                                      # (B, W-1, Di)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else jnp.zeros_like(pad)
+    return out, new_state
+
+
+def mamba_head(x, lp, cfg: ModelConfig, *, state=None, chunk: int = 256):
+    """x: (B, T, D) -> (y (B,T,D), new_state).  ``state`` = (h (B,Di,N), conv (B,W-1,Di)).
+
+    ``lp`` holds this layer's parameters (already sliced out of the stacked tree by
+    the layer scan)."""
+    s = cfg.ssm
+    di, n, dtr = s.expand * cfg.d_model, s.state_dim, cfg.dt_rank
+    B, T, D = x.shape
+    xz = x @ lp["ssm_in"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = logical_constraint(xin, ("batch", None, "ssm_inner"))
+    h0 = jnp.zeros((B, di, n), jnp.float32) if state is None else state[0]
+    conv_state = None if state is None else state[1]
+    xin, new_conv = _causal_conv(xin, lp["ssm_conv"], conv_state)
+    xin = jax.nn.silu(xin)
+    proj = xin @ lp["ssm_x"]                                  # (B,T,dtr+2N)
+    dt_raw, b_coef, c_coef = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ lp["ssm_dt"]).astype(jnp.float32)  # (B,T,Di)
+    a = -jnp.exp(lp["ssm_a_log"].astype(jnp.float32))         # (Di,N)
+    abar = jnp.exp(dt[..., None] * a)                         # (B,T,Di,N)
+    bx = (dt * xin.astype(jnp.float32))[..., None] * b_coef[:, :, None, :].astype(jnp.float32)
+    y, h_last = _chunked_scan(abar, bx, c_coef.astype(jnp.float32), h0, chunk)
+    y = y.astype(x.dtype) + xin * lp["ssm_skip"]
+    y = y * jax.nn.silu(z)
+    out = y @ lp["ssm_out"]
+    return out, (h_last, new_conv)

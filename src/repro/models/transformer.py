@@ -1,0 +1,343 @@
+"""Decoder LM stack for the dense / moe / hybrid families.
+
+Layers are *stacked* (leading L axis) and iterated with ``jax.lax.scan`` so the HLO
+stays compact for 40–62-layer configs (one while-loop, not L inlined blocks); this is
+also what makes GradES's per-(layer, type) freeze masks representable as (L,) boolean
+vectors (see repro/core/grades.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import apply_rope, cross_entropy, init_dense, rms_norm, shard_batch
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_layer_params(key, cfg: ModelConfig, n_layers: int, dtype: str) -> Dict[str, Any]:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = iter(jax.random.split(key, 16))
+    L = n_layers
+    p: Dict[str, Any] = {
+        "attn_norm": jnp.zeros((L, d), jnp.dtype(dtype)),
+        "wq": init_dense(next(ks), (L, d, qd), dtype=dtype),
+        "wk": init_dense(next(ks), (L, d, kvd), dtype=dtype),
+        "wv": init_dense(next(ks), (L, d, kvd), dtype=dtype),
+        "wo": init_dense(next(ks), (L, qd, d), dtype=dtype),
+        "mlp_norm": jnp.zeros((L, d), jnp.dtype(dtype)),
+    }
+    if cfg.moe is not None:
+        e, f = cfg.moe.n_experts, cfg.moe.d_ff
+        p.update({
+            "router": init_dense(next(ks), (L, d, e), dtype=dtype),
+            "w_gate": init_dense(next(ks), (L, e, d, f), dtype=dtype),
+            "w_up": init_dense(next(ks), (L, e, d, f), dtype=dtype),
+            "w_down": init_dense(next(ks), (L, e, f, d), in_axis=-2, dtype=dtype),
+        })
+    elif cfg.mlp_act == "swiglu":
+        p.update({
+            "w_gate": init_dense(next(ks), (L, d, cfg.d_ff), dtype=dtype),
+            "w_up": init_dense(next(ks), (L, d, cfg.d_ff), dtype=dtype),
+            "w_down": init_dense(next(ks), (L, cfg.d_ff, d), dtype=dtype),
+        })
+    else:  # gelu
+        p.update({
+            "w_up": init_dense(next(ks), (L, d, cfg.d_ff), dtype=dtype),
+            "w_down": init_dense(next(ks), (L, cfg.d_ff, d), dtype=dtype),
+        })
+    if cfg.ssm is not None:
+        p.update(ssm_lib.init_ssm_params(next(ks), cfg, L, dtype))
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = cfg.param_dtype
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "embed": init_dense(k1, (cfg.vocab, cfg.d_model), in_axis=-1, dtype=dtype),
+        "layers": init_layer_params(k2, cfg, cfg.n_layers, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.dtype(dtype)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(k3, (cfg.d_model, cfg.vocab), dtype=dtype)
+    return params
+
+
+# logical axes for every parameter (drives both pjit shardings and constraints).
+# Attention projections are tensor-parallel ONLY when both head counts divide the
+# model axis: sharding the fused q/kv dim when heads don't divide makes XLA
+# re-gather the per-head layout every layer (decode: the whole KV cache) — worse
+# than replicating the projections.  ``model_size=None`` (tests, single device)
+# keeps the TP axes.
+def layer_param_axes(cfg: ModelConfig, model_size: Optional[int] = None) -> Dict[str, Tuple]:
+    tp_attn = model_size is None or (cfg.n_heads % model_size == 0
+                                     and cfg.n_kv_heads % model_size == 0)
+    qax = "qdim" if tp_attn else None
+    kvax = "kvdim" if tp_attn else None
+    ax: Dict[str, Tuple] = {
+        "attn_norm": (None, None),
+        "wq": (None, "fsdp", qax),
+        "wk": (None, "fsdp", kvax),
+        "wv": (None, "fsdp", kvax),
+        "wo": (None, qax, "fsdp"),
+        "mlp_norm": (None, None),
+    }
+    if cfg.moe is not None:
+        ax.update({
+            "router": (None, "fsdp", None),
+            "w_gate": (None, "expert", "fsdp", None),
+            "w_up": (None, "expert", "fsdp", None),
+            "w_down": (None, "expert", None, "fsdp"),
+        })
+    else:
+        ax.update({
+            "w_gate": (None, "fsdp", "ffn"),
+            "w_up": (None, "fsdp", "ffn"),
+            "w_down": (None, "ffn", "fsdp"),
+        })
+        if cfg.mlp_act != "swiglu":
+            ax.pop("w_gate")
+    if cfg.ssm is not None:
+        ax.update({
+            "ssm_in": (None, "fsdp", "ssm_inner"),
+            "ssm_conv": (None, None, "ssm_inner"),
+            "ssm_x": (None, "ssm_inner", None),
+            "ssm_dt": (None, None, "ssm_inner"),
+            "ssm_a_log": (None, "ssm_inner", None),
+            "ssm_skip": (None, "ssm_inner"),
+            "ssm_out": (None, "ssm_inner", "fsdp"),
+        })
+    return ax
+
+
+def param_logical_axes(cfg: ModelConfig, model_size: Optional[int] = None) -> Dict[str, Any]:
+    out = {
+        "embed": ("vocab", "fsdp"),
+        "layers": layer_param_axes(cfg, model_size),
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ("fsdp", "vocab")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _qkv(x, lp, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    hd, KV = cfg.resolved_head_dim, cfg.n_kv_heads
+    G = cfg.n_heads // KV
+    q = (x @ lp["wq"]).reshape(B, S, KV, G, hd)
+    k = (x @ lp["wk"]).reshape(B, S, KV, hd)
+    v = (x @ lp["wv"]).reshape(B, S, KV, hd)
+    q = apply_rope(q.reshape(B, S, KV * G, hd), positions, cfg.rope_theta
+                   ).reshape(B, S, KV, G, hd)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_block(x, lp, cfg: ModelConfig, positions, *, attn_args: Dict[str, Any]):
+    """Pre-norm attention residual branch; returns (delta, (k, v)) for caching.
+
+    When ``cfg.seq_parallel_attn`` (heads don't divide the TP axis), the block
+    runs sequence-parallel: activations are sharded on the SEQ dim over "model"
+    so the O(S·T) score tensor and the attention FLOPs partition across the TP
+    axis instead of being replicated; GSPMD inserts the k/v all-gather and the
+    seq<->model transitions around the block (Megatron-SP adapted to GSPMD).
+    """
+    B, S = x.shape[:2]
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    sp = cfg.seq_parallel_attn and S > 1
+    if sp:
+        h = logical_constraint(h, ("batch", "attn_seq", None))
+    q, k, v = _qkv(h, lp, cfg, positions)
+    if sp:
+        q = logical_constraint(q, ("batch", "attn_seq", None, None, None))
+    o = attn_lib.attention(q, k, v, causal=True, window=cfg.swa_window, **attn_args)
+    if sp:
+        o = logical_constraint(o, ("batch", "attn_seq", None, None, None))
+    o = o.reshape(B, S, cfg.q_dim) @ lp["wo"]
+    return o, (k, v)
+
+
+def mlp_block(x, lp, cfg: ModelConfig):
+    """Pre-norm FFN/MoE residual branch; returns (delta, aux_loss)."""
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    if cfg.moe is not None:
+        return moe_lib.moe_block(h, lp, cfg.moe)
+    if cfg.mlp_act == "swiglu":
+        from repro.models.mlp import swiglu
+        return swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"]), jnp.float32(0)
+    from repro.models.mlp import gelu_mlp
+    return gelu_mlp(h, lp["w_up"], lp["w_down"]), jnp.float32(0)
+
+
+def decoder_block(x, lp, cfg: ModelConfig, positions, *, ssm_state=None,
+                  attn_args: Dict[str, Any]):
+    a_out, kv = attn_block(x, lp, cfg, positions, attn_args=attn_args)
+    new_ssm = None
+    if cfg.ssm is not None:  # hymba: attention and mamba heads in parallel
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        m_out, new_ssm = ssm_lib.mamba_head(h, lp, cfg, state=ssm_state)
+        a_out = (a_out + m_out) * 0.5
+    x = x + a_out
+    m, aux = mlp_block(x, lp, cfg)
+    x = shard_batch(x + m)
+    return x, kv, new_ssm, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill) via scan over stacked layers
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens, *, remat: str = "none",
+            collect_cache: bool = False, cache_window: int = 0,
+            attn_args: Optional[Dict[str, Any]] = None):
+    """tokens: (B, S) int32 -> (logits, aux).
+
+    With ``collect_cache`` also returns the per-layer KV/SSM state for decode.
+    """
+    attn_args = attn_args or {}
+    B, S = tokens.shape
+    x = shard_batch(params["embed"].astype(cfg.dtype)[tokens])
+    positions = jnp.arange(S)[None, :]
+
+    init_ssm = None
+    if cfg.ssm is not None:
+        di = cfg.ssm.expand * cfg.d_model
+        init_ssm = (jnp.zeros((B, di, cfg.ssm.state_dim), jnp.float32),
+                    jnp.zeros((B, cfg.ssm.conv_width - 1, di), cfg.dtype))
+
+    def body(x, lp):
+        lp = jax.tree.map(lambda a: a.astype(cfg.dtype)
+                          if jnp.issubdtype(a.dtype, jnp.floating) else a, lp)
+        x, kv, new_ssm, aux = decoder_block(
+            x, lp, cfg, positions, ssm_state=init_ssm, attn_args=attn_args)
+        ys = {"aux": aux}
+        if collect_cache:
+            k, v = kv
+            if cache_window and cache_window < S:
+                k, v = k[:, -cache_window:], v[:, -cache_window:]
+            ys["k"], ys["v"] = k, v
+            if new_ssm is not None:
+                ys["ssm_h"], ys["ssm_conv"] = new_ssm
+        return x, ys
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_no_batch_dims)
+
+    x, ys = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]).astype(cfg.dtype)
+    logits = x @ head
+    logits = logical_constraint(logits, ("batch", None, "vocab"))
+    aux = ys.pop("aux").mean()
+    return (logits, aux, ys) if collect_cache else (logits, aux)
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: ModelConfig, max_len: int) -> int:
+    return min(cfg.swa_window, max_len) if cfg.swa_window else max_len
+
+
+def init_cache(params, cfg: ModelConfig, batch: int, max_len: int):
+    C = cache_len(cfg, max_len)
+    L, hd, KV = cfg.n_layers, cfg.resolved_head_dim, cfg.n_kv_heads
+    cache = {
+        "k": jnp.zeros((L, batch, C, KV, hd), cfg.dtype),
+        "v": jnp.zeros((L, batch, C, KV, hd), cfg.dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.ssm is not None:
+        di = cfg.ssm.expand * cfg.d_model
+        cache["ssm_h"] = jnp.zeros((L, batch, di, cfg.ssm.state_dim), jnp.float32)
+        cache["ssm_conv"] = jnp.zeros((L, batch, cfg.ssm.conv_width - 1, di), cfg.dtype)
+    return cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int,
+            attn_args: Optional[Dict[str, Any]] = None):
+    """Full-sequence forward that also builds the decode cache."""
+    B, S = tokens.shape
+    C = cache_len(cfg, max_len)
+    logits, aux, ys = forward(params, cfg, tokens, collect_cache=True,
+                              cache_window=C if cfg.swa_window else 0,
+                              attn_args=attn_args)
+    k, v = ys["k"], ys["v"]  # (L, B, min(S,C), KV, hd)
+    if k.shape[2] < C:
+        zeros = jnp.zeros(k.shape[:2] + (C - k.shape[2],) + k.shape[3:], k.dtype)
+        k = jnp.concatenate([k, zeros], axis=2)
+        v = jnp.concatenate([v, zeros], axis=2)
+    elif cfg.swa_window and S > C:
+        # ring invariant: token j lives at slot j % C.  The collected window holds
+        # tokens S-C..S-1 at slots 0..C-1; rotate so decode_step's (pos % C) write
+        # evicts the oldest token.
+        k = jnp.roll(k, S % C, axis=2)
+        v = jnp.roll(v, S % C, axis=2)
+    cache = {"k": k, "v": v, "pos": jnp.int32(S)}
+    if cfg.ssm is not None:
+        cache["ssm_h"], cache["ssm_conv"] = ys["ssm_h"], ys["ssm_conv"]
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    """tokens: (B, 1). One decode step; returns (logits, new cache)."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = params["embed"].astype(cfg.dtype)[tokens]              # (B, 1, D)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    C = cache["k"].shape[2]
+    slot = pos % C if cfg.swa_window else jnp.minimum(pos, C - 1)
+
+    xs = {"lp": params["layers"], "k": cache["k"], "v": cache["v"]}
+    if cfg.ssm is not None:
+        xs["ssm_h"], xs["ssm_conv"] = cache["ssm_h"], cache["ssm_conv"]
+
+    def body(x, layer_in):
+        lp = jax.tree.map(lambda a: a.astype(cfg.dtype)
+                          if jnp.issubdtype(a.dtype, jnp.floating) else a,
+                          layer_in["lp"])
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k_new, v_new = _qkv(h, lp, cfg, positions)
+        kc = jax.lax.dynamic_update_slice_in_dim(layer_in["k"], k_new, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(layer_in["v"], v_new, slot, axis=1)
+        o = attn_lib.decode_attention(q, kc, vc, length=pos + 1,
+                                      window=cfg.swa_window)
+        a_out = o.reshape(B, 1, cfg.q_dim) @ lp["wo"]
+        ys = {"k": kc, "v": vc}
+        if cfg.ssm is not None:
+            m_out, (h2, conv2) = ssm_lib.mamba_head(
+                h, lp, cfg, state=(layer_in["ssm_h"], layer_in["ssm_conv"]))
+            a_out = (a_out + m_out) * 0.5
+            ys["ssm_h"], ys["ssm_conv"] = h2, conv2
+        x = x + a_out
+        m, _ = mlp_block(x, lp, cfg)
+        return x + m, ys
+
+    x, ys = jax.lax.scan(body, x, xs)
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]).astype(cfg.dtype)
+    logits = x @ head
+    new_cache = {"k": ys["k"], "v": ys["v"], "pos": pos + 1}
+    if cfg.ssm is not None:
+        new_cache["ssm_h"], new_cache["ssm_conv"] = ys["ssm_h"], ys["ssm_conv"]
+    return logits, new_cache

@@ -1,0 +1,253 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) + sLSTM (scalar memory,
+recurrent), per arXiv:2405.04517 with stabilized exponential gating.
+
+The scanned "superblock" = [mLSTM sub-block, sLSTM sub-block], so a 24-layer config
+stacks 12 homogeneous superblocks (required for ``lax.scan`` over layers).
+
+TPU adaptation: the mLSTM recurrence is evaluated *chunkwise* — quadratic gated
+attention inside chunks of size Q, a (dk × dv) matrix-memory carry across chunks —
+the same schedule used for the SSM head.  Decode is the O(1) recurrent step, which
+is what makes the ``long_500k`` cell sub-quadratic for this arch.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import os
+
+from repro.config import ModelConfig
+from repro.models.common import init_dense, rms_norm
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, dk, dv) matrix memory (stabilized)
+    n: jax.Array  # (B, H, dk) normalizer
+    m: jax.Array  # (B, H) log-scale stabilizer
+
+
+def mlstm_init_state(batch: int, n_heads: int, dk: int, dv: int) -> MLSTMState:
+    return MLSTMState(
+        c=jnp.zeros((batch, n_heads, dk, dv), jnp.float32),
+        n=jnp.zeros((batch, n_heads, dk), jnp.float32),
+        m=jnp.full((batch, n_heads), -1e30, jnp.float32),
+    )
+
+
+def _mlstm_chunk(q, k, v, ilog, flog, state: MLSTMState):
+    """One chunk. q,k,v: (B,Q,H,hd); ilog/flog: (B,Q,H) log gates (f already logsig)."""
+    B, Q, H, hd = q.shape
+    scale = hd ** -0.5
+    b = jnp.cumsum(flog, axis=1)                                  # (B,Q,H) inclusive
+    # intra-chunk logits: d[i,j] = b_i - b_j + ilog_j  (j <= i)
+    d = b[:, :, None, :] - b[:, None, :, :] + ilog[:, None, :, :]  # (B,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    d = jnp.where(tri[None, :, :, None], d, NEG)
+    # inter-chunk (carry) log-scale per position: b_i + m_carry
+    inter = b + state.m[:, None, :]                                # (B,Q,H)
+    m_i = jnp.maximum(d.max(axis=2), inter)                        # (B,Q,H)
+    w_intra = jnp.exp(d - m_i[:, :, None, :])                      # (B,Qi,Qj,H)
+    w_inter = jnp.exp(inter - m_i)                                 # (B,Q,H)
+    scores = jnp.einsum("bihd,bjhd->bijh", q, k) * scale
+    num = jnp.einsum("bijh,bijh,bjhd->bihd", scores.astype(jnp.float32), w_intra,
+                     v.astype(jnp.float32))
+    num = num + w_inter[..., None] * jnp.einsum(
+        "bihk,bhkv->bihv", q.astype(jnp.float32) * scale, state.c)
+    den = jnp.einsum("bijh,bijh->bih", scores.astype(jnp.float32), w_intra)
+    den = den + w_inter * jnp.einsum("bihk,bhk->bih", q.astype(jnp.float32) * scale,
+                                     state.n)
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    # carry update to end-of-chunk
+    b_end = b[:, -1]                                               # (B,H)
+    decay_j = b_end[:, None, :] - b + ilog                         # (B,Q,H)
+    m_new = jnp.maximum(b_end + state.m, decay_j.max(axis=1))
+    w_c = jnp.exp(decay_j - m_new[:, None, :])                     # (B,Q,H)
+    c_new = jnp.exp(b_end + state.m - m_new)[..., None, None] * state.c \
+        + jnp.einsum("bjh,bjhk,bjhv->bhkv", w_c, k.astype(jnp.float32),
+                     v.astype(jnp.float32))
+    n_new = jnp.exp(b_end + state.m - m_new)[..., None] * state.n \
+        + jnp.einsum("bjh,bjhk->bhk", w_c, k.astype(jnp.float32))
+    return h, MLSTMState(c_new, n_new, m_new)
+
+
+def mlstm_sequence(q, k, v, ilog, flog, state: Optional[MLSTMState] = None,
+                   chunk: int = 256):
+    """q,k,v: (B,T,H,hd). Returns (h (B,T,H,hd), final state)."""
+    B, T, H, hd = q.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    nc = T // chunk
+    if state is None:
+        state = mlstm_init_state(B, H, hd, hd)
+
+    def body(st, inp):
+        qc, kc, vc, ic, fc = inp
+        h, st2 = _mlstm_chunk(qc, kc, vc, ic, fc, st)
+        return st2, h
+
+    split = lambda x: x.reshape(B, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+    state, hs = jax.lax.scan(body, state, tuple(map(split, (q, k, v, ilog, flog))))
+    return hs.swapaxes(0, 1).reshape(B, T, H, hd), state
+
+
+def mlstm_step(q, k, v, ilog, flog, state: MLSTMState):
+    """Decode: q,k,v (B,H,hd); gates (B,H)."""
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+    m_new = jnp.maximum(flog + state.m, ilog)
+    fw = jnp.exp(flog + state.m - m_new)
+    iw = jnp.exp(ilog - m_new)
+    c = fw[..., None, None] * state.c + iw[..., None, None] * (
+        k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :])
+    n = fw[..., None] * state.n + iw[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32) * scale, c)
+    den = jnp.einsum("bhk,bhk->bh", q.astype(jnp.float32) * scale, n)
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    return h, MLSTMState(c, n, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, D)
+    n: jax.Array  # (B, D)
+    h: jax.Array  # (B, D)
+    m: jax.Array  # (B, D)
+
+
+def slstm_init_state(batch: int, d: int) -> SLSTMState:
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(z, z, z, jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def _slstm_cell(x_proj, r, state: SLSTMState, n_heads: int):
+    """x_proj: (B, 4D) precomputed W[x]; r: (4, H, hd, hd) recurrent per head.
+
+    §Perf iteration 3a: the recurrent matmul runs in the weights' storage dtype
+    with an f32 accumulator — upcasting R inside the time scan materialized a
+    full f32 copy of R EVERY step (4 MiB × T × L of pure HBM traffic in the
+    lowered HLO).
+    """
+    B, D4 = x_proj.shape
+    D = D4 // 4
+    hd = D // n_heads
+    if os.environ.get("XLSTM_NAIVE"):  # §Perf baseline variant
+        rec = jnp.einsum("ghkj,bhk->gbhj", r.astype(jnp.float32),
+                         state.h.reshape(B, n_heads, hd)).reshape(4, B, D)
+    else:
+        hprev = state.h.reshape(B, n_heads, hd).astype(r.dtype)
+        rec = jnp.einsum("ghkj,bhk->gbhj", r, hprev,
+                         preferred_element_type=jnp.float32).reshape(4, B, D)
+    zr, ir, fr, orr = x_proj.astype(jnp.float32).reshape(B, 4, D).swapaxes(0, 1) + rec
+    zt = jnp.tanh(zr)
+    ot = jax.nn.sigmoid(orr)
+    ilog = ir
+    flog = jax.nn.log_sigmoid(fr)
+    m_new = jnp.maximum(flog + state.m, ilog)
+    c = jnp.exp(flog + state.m - m_new) * state.c + jnp.exp(ilog - m_new) * zt
+    n = jnp.exp(flog + state.m - m_new) * state.n + jnp.exp(ilog - m_new)
+    h = ot * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c, n, h, m_new)
+
+
+def slstm_sequence(x_proj, r, n_heads: int, state: Optional[SLSTMState] = None):
+    """x_proj: (B, T, 4D). Returns (h (B,T,D), final state)."""
+    B, T, D4 = x_proj.shape
+    if state is None:
+        state = slstm_init_state(B, D4 // 4)
+
+    def body(st, xp):
+        st2 = _slstm_cell(xp, r, st, n_heads)
+        return st2, st2.h
+
+    state, hs = jax.lax.scan(body, state, x_proj.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), state
+
+
+# ---------------------------------------------------------------------------
+# Superblock (mLSTM sub-block + sLSTM sub-block) parameters & forward
+# ---------------------------------------------------------------------------
+
+def init_xlstm_params(key, cfg: ModelConfig, dtype: str):
+    d = cfg.d_model
+    dm = 2 * d                       # mLSTM up-projection (expand 2)
+    ff = 2 * d                       # sLSTM feed-forward
+    L = cfg.n_layers // 2
+    ks = jax.random.split(key, 12)
+    return {
+        "m_norm": jnp.zeros((L, d), jnp.dtype(dtype)),
+        "m_up": init_dense(ks[0], (L, d, 2 * dm), dtype=dtype),
+        "m_q": init_dense(ks[1], (L, dm, dm), dtype=dtype),
+        "m_k": init_dense(ks[2], (L, dm, dm), dtype=dtype),
+        "m_v": init_dense(ks[3], (L, dm, dm), dtype=dtype),
+        "m_gates": init_dense(ks[4], (L, dm, 2 * cfg.n_heads), dtype=dtype),
+        "m_down": init_dense(ks[5], (L, dm, d), dtype=dtype),
+        "s_norm": jnp.zeros((L, d), jnp.dtype(dtype)),
+        "s_w": init_dense(ks[6], (L, d, 4 * d), dtype=dtype),
+        "s_r": init_dense(ks[7], (L, 4, cfg.n_heads, d // cfg.n_heads,
+                                  d // cfg.n_heads), dtype=dtype),
+        "s_up": init_dense(ks[8], (L, d, 2 * ff), dtype=dtype),
+        "s_down": init_dense(ks[9], (L, ff, d), dtype=dtype),
+    }
+
+
+def xlstm_superblock(x, lp, cfg: ModelConfig, *, state=None, chunk: int = 256,
+                     decode: bool = False):
+    """x: (B,T,D) (T=1 with decode=True). state=(MLSTMState, SLSTMState)."""
+    d = cfg.d_model
+    H = cfg.n_heads
+    dm = 2 * d
+    hd = dm // H
+    mstate, sstate = state if state is not None else (None, None)
+    # --- mLSTM sub-block ---
+    h = rms_norm(x, lp["m_norm"], cfg.norm_eps)
+    up = h @ lp["m_up"]
+    xin, z = jnp.split(up, 2, axis=-1)
+    B, T, _ = xin.shape
+    q = (xin @ lp["m_q"]).reshape(B, T, H, hd)
+    k = (xin @ lp["m_k"]).reshape(B, T, H, hd)
+    v = (xin @ lp["m_v"]).reshape(B, T, H, hd)
+    gates = (xin @ lp["m_gates"]).astype(jnp.float32).reshape(B, T, 2, H)
+    ilog, flog = gates[:, :, 0], jax.nn.log_sigmoid(gates[:, :, 1])
+    if decode:
+        if mstate is None:
+            mstate = mlstm_init_state(B, H, hd, hd)
+        hm, mstate = mlstm_step(q[:, 0], k[:, 0], v[:, 0], ilog[:, 0], flog[:, 0],
+                                mstate)
+        hm = hm[:, None]
+    else:
+        hm, mstate = mlstm_sequence(q, k, v, ilog, flog, mstate, chunk=chunk)
+    hm = hm.astype(x.dtype).reshape(B, T, dm) * jax.nn.silu(z)
+    x = x + hm @ lp["m_down"]
+    # --- sLSTM sub-block ---
+    h = rms_norm(x, lp["s_norm"], cfg.norm_eps)
+    xp = h @ lp["s_w"]
+    # §Perf iteration 3b (REFUTED, opt-in only): pre-scan resharding of x_proj
+    # was hypothesized to remove the per-step collectives GSPMD inserts in the
+    # recurrence — measurement showed it instead *adds* a 536 MB/layer gather and
+    # regressed the collective term 2.4s -> 18s; see EXPERIMENTS.md §Perf cell 3.
+    if os.environ.get("XLSTM_RESHARD"):
+        from repro.distributed.sharding import logical_constraint
+        xp = logical_constraint(xp, ("batch", None, None) if xp.ndim == 3
+                                else ("batch", None))
+    if decode:
+        if sstate is None:
+            sstate = slstm_init_state(B, d)
+        sstate = _slstm_cell(xp[:, 0], lp["s_r"], sstate, H)
+        hs = sstate.h[:, None]
+    else:
+        hs, sstate = slstm_sequence(xp, lp["s_r"], H, sstate)
+    hs = hs.astype(x.dtype)
+    ug, uv = jnp.split(hs @ lp["s_up"], 2, axis=-1)
+    x = x + (jax.nn.gelu(ug) * uv) @ lp["s_down"]
+    return x, (mstate, sstate)

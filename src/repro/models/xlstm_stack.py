@@ -1,0 +1,111 @@
+"""Full xLSTM LM: embedding + scanned superblocks + head (see models/xlstm.py)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models.common import init_dense, rms_norm, shard_batch
+from repro.models.xlstm import (MLSTMState, SLSTMState, init_xlstm_params,
+                                mlstm_init_state, slstm_init_state,
+                                xlstm_superblock)
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = cfg.param_dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": init_dense(k1, (cfg.vocab, cfg.d_model), in_axis=-1, dtype=dtype),
+        "layers": init_xlstm_params(k2, cfg, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.dtype(dtype)),
+        "lm_head": init_dense(k3, (cfg.d_model, cfg.vocab), dtype=dtype),
+    }
+
+
+def param_logical_axes(cfg: ModelConfig, model_size=None) -> Dict[str, Any]:
+    return {
+        "embed": ("vocab", "fsdp"),
+        "layers": {
+            "m_norm": (None, None),
+            "m_up": (None, "fsdp", "ffn"),
+            "m_q": (None, "fsdp", "ffn"),
+            "m_k": (None, "fsdp", "ffn"),
+            "m_v": (None, "fsdp", "ffn"),
+            "m_gates": (None, "ffn", None),
+            "m_down": (None, "ffn", "fsdp"),
+            "s_norm": (None, None),
+            "s_w": (None, "fsdp", "ffn"),
+            "s_r": (None, None, "heads", None, None),
+            "s_up": (None, "fsdp", "ffn"),
+            "s_down": (None, "ffn", "fsdp"),
+        },
+        "final_norm": (None,),
+        "lm_head": ("fsdp", "vocab"),
+    }
+
+
+def _cast(lp, dtype):
+    return jax.tree.map(lambda a: a.astype(dtype)
+                        if jnp.issubdtype(a.dtype, jnp.floating) else a, lp)
+
+
+def _zero_states(cfg: ModelConfig, batch: int):
+    dm = 2 * cfg.d_model
+    hd = dm // cfg.n_heads
+    return (mlstm_init_state(batch, cfg.n_heads, hd, hd),
+            slstm_init_state(batch, cfg.d_model))
+
+
+def forward(params, cfg: ModelConfig, tokens, *, remat: str = "none",
+            collect_cache: bool = False):
+    B, S = tokens.shape
+    x = shard_batch(params["embed"].astype(cfg.dtype)[tokens])
+    z = _zero_states(cfg, B)
+
+    def body(x, lp):
+        lp = _cast(lp, cfg.dtype)
+        x, (ms, ss) = xlstm_superblock(x, lp, cfg, state=z)
+        ys = {"m": ms, "s": ss} if collect_cache else {}
+        return x, ys
+
+    if remat in ("full", "dots"):
+        body = jax.checkpoint(body)
+    x, ys = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(cfg.dtype)
+    logits = logical_constraint(logits, ("batch", None, "vocab"))
+    if collect_cache:
+        return logits, jnp.float32(0), ys
+    return logits, jnp.float32(0)
+
+
+def init_cache(params, cfg: ModelConfig, batch: int, max_len: int):
+    ms, ss = _zero_states(cfg, batch)
+    L = cfg.n_layers // 2
+    stack = lambda st: jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape), st)
+    return {"m": stack(ms), "s": stack(ss), "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int):
+    logits, _, ys = forward(params, cfg, tokens, collect_cache=True)
+    return logits, {"m": ys["m"], "s": ys["s"], "pos": jnp.int32(tokens.shape[1])}
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    B = tokens.shape[0]
+    x = params["embed"].astype(cfg.dtype)[tokens]
+
+    def body(x, layer_in):
+        lp = _cast(layer_in["lp"], cfg.dtype)
+        state = (MLSTMState(*layer_in["m"]), SLSTMState(*layer_in["s"]))
+        x, (ms, ss) = xlstm_superblock(x, lp, cfg, state=state, decode=True)
+        return x, {"m": ms, "s": ss}
+
+    xs = {"lp": params["layers"], "m": tuple(cache["m"]), "s": tuple(cache["s"])}
+    x, ys = jax.lax.scan(body, x, xs)
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(cfg.dtype)
+    return logits, {"m": ys["m"], "s": ys["s"], "pos": cache["pos"] + 1}

@@ -1,0 +1,7 @@
+from repro.optim.optimizer import (  # noqa: F401
+    OptState,
+    init_opt_state,
+    apply_updates,
+    lr_at,
+    global_norm,
+)

@@ -1,0 +1,124 @@
+"""Optimizers (AdamW / SGD-momentum) with GradES-aware masked updates.
+
+Two masking tiers compose here (DESIGN.md §2):
+
+* ``freeze_masks`` (dynamic, per step): boolean pytree from GradES; a frozen
+  matrix's parameters and moments are left bit-identical — exactly the paper's
+  "skip update (but gradient still flows)" (Algorithm 1, line 15).
+* ``trainable`` (static, per repartition): params statically frozen by Tier-1 hold a
+  1-element moment placeholder instead of full m/v buffers, freeing 8 bytes/param
+  of optimizer state for converged matrix types.
+
+Moments can be stored in bf16 (``opt_state_dtype``) for trillion-parameter configs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+@dataclass
+class OptState:
+    count: jax.Array
+    m: Any
+    v: Any
+
+
+jax.tree_util.register_dataclass(OptState, data_fields=["count", "m", "v"],
+                                 meta_fields=[])
+
+
+def _placeholder(dtype):
+    return jnp.zeros((1,), dtype)
+
+
+def init_opt_state(params, tcfg: TrainConfig, trainable=None) -> OptState:
+    dt = jnp.dtype(tcfg.opt_state_dtype)
+    if trainable is None:
+        trainable = jax.tree.map(lambda _: True, params)
+    zeros = jax.tree.map(
+        lambda p, t: jnp.zeros(p.shape, dt) if t else _placeholder(dt),
+        params, trainable)
+    if tcfg.optimizer == "sgd":
+        return OptState(count=jnp.zeros((), jnp.int32), m=zeros,
+                        v=jax.tree.map(lambda _: _placeholder(dt), params))
+    return OptState(count=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(lambda z: jnp.zeros_like(z), zeros))
+
+
+def lr_at(step, tcfg: TrainConfig):
+    warm = max(int(tcfg.warmup_frac * tcfg.steps), 1)
+    frac = jnp.minimum(step / warm, 1.0)
+    if tcfg.schedule == "constant":
+        return tcfg.lr * frac
+    prog = jnp.clip((step - warm) / max(tcfg.steps - warm, 1), 0.0, 1.0)
+    return tcfg.lr * frac * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def apply_updates(params, grads, opt: OptState, tcfg: TrainConfig, *,
+                  freeze_masks=None, trainable=None,
+                  lr: Optional[jax.Array] = None):
+    """Returns (new_params, new_opt).  ``freeze_masks``: True = GradES-frozen."""
+    count = opt.count + 1
+    lr = lr_at(count, tcfg) if lr is None else lr
+    if tcfg.grad_clip:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    if trainable is None:
+        trainable = jax.tree.map(lambda _: True, params)
+    if freeze_masks is None:
+        freeze_masks = jax.tree.map(lambda _: jnp.zeros((), bool), params)
+
+    def upd(p, g, m, v, mask, train):
+        if not train:
+            return p, m, v
+        g32 = g.astype(jnp.float32)
+        live = ~mask  # True where the matrix still trains
+        if tcfg.optimizer == "sgd":
+            m32 = m.astype(jnp.float32)
+            m_new = jnp.where(live, tcfg.b1 * m32 + g32, m32)
+            step_vec = lr * m_new
+            v_new = v
+        else:
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            m_new = jnp.where(live, tcfg.b1 * m32 + (1 - tcfg.b1) * g32, m32)
+            v_new = jnp.where(live, tcfg.b2 * v32 + (1 - tcfg.b2) * g32 * g32, v32)
+            mhat = m_new / (1 - tcfg.b1 ** count)
+            vhat = v_new / (1 - tcfg.b2 ** count)
+            step_vec = lr * mhat / (jnp.sqrt(vhat) + tcfg.eps)
+        p32 = p.astype(jnp.float32)
+        decay = lr * tcfg.weight_decay * p32 if tcfg.weight_decay else 0.0
+        p_new = jnp.where(live, p32 - step_vec - decay, p32)
+        dt = jnp.dtype(tcfg.opt_state_dtype)
+        return (p_new.astype(p.dtype), m_new.astype(dt),
+                v_new.astype(dt) if v.size > 1 else v)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt.m)
+    flat_v = treedef.flatten_up_to(opt.v)
+    flat_mask = treedef.flatten_up_to(freeze_masks)
+    flat_train = treedef.flatten_up_to(trainable)
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v, mask, train in zip(flat_p, flat_g, flat_m, flat_v,
+                                       flat_mask, flat_train):
+        pn, mn, vn = upd(p, g, m, v, mask, train)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+    unflat = jax.tree_util.tree_unflatten
+    return (unflat(treedef, new_p),
+            OptState(count=count, m=unflat(treedef, new_m),
+                     v=unflat(treedef, new_v)))

@@ -1,0 +1,3 @@
+from repro.train.state import TrainState, init_train_state  # noqa: F401
+from repro.train.step import make_train_step, make_eval_step  # noqa: F401
+from repro.train.loop import Trainer  # noqa: F401

@@ -1,0 +1,159 @@
+"""Host-side training loop: the three GradES tiers + fault tolerance glue.
+
+* Tier 0 (in-jit freeze masks) lives in the compiled step.
+* Tier 1: every ``repartition_interval`` steps the host reads the (tiny) frozen
+  masks; newly fully-frozen matrix *types* trigger a re-jit with stop_gradient
+  applied to them — backward FLOPs genuinely shrink (bounded recompiles ≤ #types).
+* Tier 2: when every monitored matrix is frozen, training terminates (Algorithm 1
+  line 24).
+* Classic validation early stopping (the paper's FP+ES / LoRA+ES baselines) is
+  reproduced structurally: validation forward passes every ``val_interval_frac``
+  of training with patience — its cost shows up as wall-clock, exactly the
+  overhead Table 4 reports.
+* Fault tolerance: periodic async checkpoints, auto-resume from the newest valid
+  step, straggler watchdog (EMA step-time; logs anomalies).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.config import ModelConfig, TrainConfig
+from repro.core.grades import build_monitor_spec
+from repro.core.partition import fully_frozen_types
+from repro.data.pipeline import make_batches
+from repro.train.state import TrainState, init_train_state
+from repro.train.step import make_eval_step, make_train_step
+
+
+@dataclass
+class TrainResult:
+    state: TrainState
+    steps_run: int
+    wall_time: float
+    history: List[Dict[str, float]] = field(default_factory=list)
+    stop_reason: str = "budget"
+    recompiles: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, *,
+                 repartition_interval: int = 25, log_every: int = 10,
+                 log_path: Optional[str] = None):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.repartition_interval = repartition_interval
+        self.log_every = log_every
+        self.log_path = log_path
+        self.ckpt = (CheckpointManager(tcfg.checkpoint_dir,
+                                       keep=tcfg.keep_checkpoints)
+                     if tcfg.checkpoint_dir else None)
+
+    # ------------------------------------------------------------------ init
+    def init_state(self, seed: Optional[int] = None) -> TrainState:
+        key = jax.random.PRNGKey(self.tcfg.seed if seed is None else seed)
+        return init_train_state(key, self.cfg, self.tcfg)
+
+    def _resume(self, state: TrainState) -> TrainState:
+        if self.ckpt is None:
+            return state
+        latest = self.ckpt.latest()
+        if latest is None:
+            return state
+        return self.ckpt.restore(latest, state)
+
+    # ----------------------------------------------------------------- train
+    def train(self, batches: Optional[Iterator[Dict[str, np.ndarray]]] = None,
+              val_batches: Optional[List[Dict[str, np.ndarray]]] = None,
+              state: Optional[TrainState] = None) -> TrainResult:
+        cfg, tcfg = self.cfg, self.tcfg
+        state = self._resume(state if state is not None else self.init_state())
+        spec = build_monitor_spec(state.params, lora=tcfg.lora is not None)
+        static_frozen = fully_frozen_types(jax.device_get(state.grades.frozen))
+        step_fn = jax.jit(make_train_step(cfg, tcfg, spec, static_frozen),
+                          donate_argnums=0)
+        eval_fn = jax.jit(make_eval_step(cfg, tcfg)) if val_batches else None
+        if batches is None:
+            batches = make_batches(cfg, tcfg)
+
+        val_interval = max(int(tcfg.val_interval_frac * tcfg.steps), 1)
+        best_val, val_bad = float("inf"), 0
+        history: List[Dict[str, float]] = []
+        recompiles = 0
+        ema_dt: Optional[float] = None
+        t0 = time.perf_counter()
+        start_step = int(state.step)
+        stop = "budget"
+
+        for i, batch in enumerate(batches):
+            step = start_step + i
+            if step >= tcfg.steps:
+                break
+            ts = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            metrics = {k: float(v) for k, v in jax.device_get(metrics).items()}
+            dt = time.perf_counter() - ts
+            # straggler watchdog (EMA of step time; flags >3x outliers)
+            if ema_dt is None:
+                ema_dt = dt
+            elif dt > 3.0 * ema_dt and i > 3:
+                metrics["straggler"] = dt / ema_dt
+            ema_dt = 0.9 * (ema_dt or dt) + 0.1 * dt
+            metrics["step"] = step
+            metrics["dt"] = dt
+            if step % self.log_every == 0 or metrics.get("all_frozen"):
+                history.append(metrics)
+                self._log(metrics)
+
+            # Tier 2: all matrices frozen -> terminate
+            if metrics.get("all_frozen", 0) >= 1.0 and tcfg.grades.enabled:
+                stop = "all_frozen"
+                break
+
+            # Tier 1: bucketed static repartition
+            if (tcfg.grades.enabled and tcfg.grades.static_repartition
+                    and (i + 1) % self.repartition_interval == 0):
+                now_frozen = fully_frozen_types(
+                    jax.device_get(state.grades.frozen))
+                if now_frozen - static_frozen:
+                    static_frozen = frozenset(now_frozen)
+                    step_fn = jax.jit(
+                        make_train_step(cfg, tcfg, spec, static_frozen),
+                        donate_argnums=0)
+                    recompiles += 1
+
+            # classic validation early stopping baseline
+            if tcfg.val_es and eval_fn is not None and (i + 1) % val_interval == 0:
+                vl = float(np.mean([
+                    float(eval_fn(state.params, state.base_params, vb))
+                    for vb in val_batches]))
+                if vl < best_val - tcfg.val_delta:
+                    best_val, val_bad = vl, 0
+                else:
+                    val_bad += 1
+                if val_bad >= tcfg.val_patience:
+                    stop = "val_es"
+                    break
+
+            if (self.ckpt is not None and tcfg.checkpoint_every
+                    and (step + 1) % tcfg.checkpoint_every == 0):
+                self.ckpt.save(step + 1, state)
+
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        wall = time.perf_counter() - t0
+        return TrainResult(state=state, steps_run=int(state.step) - start_step,
+                           wall_time=wall, history=history, stop_reason=stop,
+                           recompiles=recompiles)
+
+    def _log(self, metrics: Dict[str, float]):
+        if self.log_path:
+            os.makedirs(os.path.dirname(self.log_path) or ".", exist_ok=True)
+            with open(self.log_path, "a") as f:
+                f.write(json.dumps(metrics) + "\n")

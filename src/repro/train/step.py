@@ -1,0 +1,95 @@
+"""train_step / eval_step factories.
+
+``make_train_step(cfg, tcfg, spec, static_frozen=...)`` closes over everything
+static and returns a pure ``(state, batch) -> (state, metrics)`` suitable for
+``jax.jit`` (the launcher adds in/out shardings and donates the state).
+
+One step = microbatched grads (lax.scan accumulation) → optional int8-EF
+compression → GradES monitor update (Algorithm 1) → masked optimizer update.
+"""
+from __future__ import annotations
+
+import functools
+from typing import AbstractSet, Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.core.grades import (MonitorSpec, all_frozen, freeze_masks_for_params,
+                               frozen_fraction, grades_update)
+from repro.core.lora import merge_lora
+from repro.core.partition import static_freeze_tree, trainable_mask
+from repro.distributed.compression import compress_with_feedback
+from repro.models import model
+from repro.optim.optimizer import apply_updates, global_norm, lr_at
+
+
+def _loss(params, base_params, batch, cfg: ModelConfig, tcfg: TrainConfig):
+    if tcfg.lora is not None:
+        merged = merge_lora(base_params, params, tcfg.lora)
+        return model.loss_fn(merged, batch, cfg, remat=tcfg.remat)
+    return model.loss_fn(params, batch, cfg, remat=tcfg.remat)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
+                    static_frozen: AbstractSet[str] = frozenset()):
+    static_frozen = frozenset(static_frozen)
+
+    def grads_of(params, base_params, batch):
+        def f(p):
+            p = static_freeze_tree(p, spec, static_frozen)
+            return _loss(p, base_params, batch, cfg, tcfg)
+        (loss, metrics), grads = jax.value_and_grad(f, has_aux=True)(params)
+        return loss, metrics, grads
+
+    def train_step(state, batch):
+        params = state.params
+        if tcfg.microbatch and tcfg.microbatch < batch["tokens"].shape[0]:
+            B = batch["tokens"].shape[0]
+            mb, n = tcfg.microbatch, B // tcfg.microbatch
+            split = jax.tree.map(
+                lambda x: x.reshape((n, mb) + x.shape[1:]), batch)
+
+            def acc(carry, b):
+                loss, metrics, grads = grads_of(params, state.base_params, b)
+                g_acc, l_acc = carry
+                return (jax.tree.map(jnp.add, g_acc, grads), l_acc + loss), metrics
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), metrics = jax.lax.scan(acc, (zero, 0.0), split)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss / n
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        else:
+            loss, metrics, grads = grads_of(params, state.base_params, batch)
+
+        ef_error = state.ef_error
+        if tcfg.grad_compression == "int8_ef" and ef_error is not None:
+            grads, ef_error = compress_with_feedback(grads, ef_error)
+
+        grades, frozen = grades_update(state.grades, grads, spec, tcfg.grades,
+                                       tcfg.steps)
+        masks = freeze_masks_for_params(params, spec, frozen)
+        trainable = trainable_mask(params, spec, static_frozen)
+        new_params, new_opt = apply_updates(params, grads, state.opt, tcfg,
+                                            freeze_masks=masks,
+                                            trainable=trainable)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = global_norm(grads)
+        metrics["frozen_frac"] = frozen_fraction(frozen)
+        metrics["all_frozen"] = all_frozen(frozen)
+        metrics["lr"] = jnp.asarray(lr_at(new_opt.count, tcfg), jnp.float32)
+        new_state = type(state)(step=state.step + 1, params=new_params,
+                                base_params=state.base_params, opt=new_opt,
+                                grades=grades, ef_error=ef_error)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, tcfg: TrainConfig):
+    def eval_step(params, base_params, batch):
+        loss, metrics = _loss(params, base_params, batch, cfg, tcfg)
+        return metrics["ce"]
+    return eval_step

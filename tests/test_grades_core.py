@@ -1,0 +1,134 @@
+"""Unit tests for the GradES core (Algorithm 1 semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import GradESConfig
+from repro.core.grades import (all_frozen, build_monitor_spec,
+                               freeze_masks_for_params, frozen_fraction,
+                               grades_update, init_grades_state)
+
+L, M, N = 3, 4, 8
+
+
+def make_params():
+    k = jax.random.PRNGKey(0)
+    return {
+        "embed": jnp.ones((16, 4)),
+        "layers": {
+            "wq": jax.random.normal(k, (L, M, N)),
+            "w_up": jax.random.normal(k, (L, M, N)),
+            "attn_norm": jnp.zeros((L, M)),            # excluded (norm)
+            "w_experts": jax.random.normal(k, (L, 2, M, N)),  # gran-1 (not a w_gate)
+        },
+        "final_norm": jnp.zeros((4,)),
+    }
+
+
+def test_monitor_spec_selects_layer_matrices():
+    spec = build_monitor_spec(make_params())
+    names = set(spec.groups)
+    assert "layers/wq" in names and "layers/w_up" in names
+    assert not any("norm" in n for n in names)
+    assert not any("embed" in n for n in names)
+
+
+def test_grace_period_blocks_freezing():
+    params = make_params()
+    spec = build_monitor_spec(params)
+    cfg = GradESConfig(tau=1e9, alpha=0.5, patience=1)  # everything instantly below tau
+    st = init_grades_state(params, spec, cfg)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    for _ in range(5):  # grace = ceil(0.5*10)=5 -> no freeze during steps 1..5
+        st, frozen = grades_update(st, zeros, spec, cfg, total_steps=10)
+        assert frozen_fraction(frozen) == 0.0
+    st, frozen = grades_update(st, zeros, spec, cfg, total_steps=10)  # step 6 > 5
+    assert float(frozen_fraction(frozen)) == 1.0
+    assert bool(all_frozen(frozen))
+
+
+def test_patience_requires_consecutive_sub_tau_steps():
+    params = make_params()
+    spec = build_monitor_spec(params)
+    cfg = GradESConfig(tau=1e-3, alpha=0.0, patience=3, normalize=True)
+    st = init_grades_state(params, spec, cfg)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    big = jax.tree.map(jnp.ones_like, params)
+    # deltas: 0, 0, big (reset), big (|0-1|, reset), 0, 0, 0 -> freeze at step 7
+    seq = [zeros, zeros, big, zeros, zeros, zeros, zeros]
+    fracs = []
+    for g in seq:
+        st, frozen = grades_update(st, g, spec, cfg, total_steps=7)
+        fracs.append(float(frozen_fraction(frozen)))
+    assert fracs[:6] == [0.0] * 6
+    assert fracs[6] == 1.0
+
+
+def test_freeze_is_monotone_and_per_layer():
+    params = make_params()
+    spec = build_monitor_spec(params)
+    cfg = GradESConfig(tau=1e-3, alpha=0.0, patience=1, normalize=True)
+    st = init_grades_state(params, spec, cfg)
+    # layer 0 of wq has zero gradients; everything else large
+    g = jax.tree.map(jnp.ones_like, params)
+    g["layers"]["wq"] = g["layers"]["wq"].at[0].set(0.0)
+    st, frozen = grades_update(st, g, spec, cfg, total_steps=4)
+    assert frozen["layers/wq"].tolist() == [True, False, False]
+    # later large gradient CHANGE on layer 0 must NOT unfreeze it (and layers
+    # 1/2 see delta |2-1|=1 > tau, so they stay live)
+    g2 = jax.tree.map(lambda p: jnp.full_like(p, 2.0), params)
+    st, frozen = grades_update(st, g2, spec, cfg, total_steps=4)
+    assert frozen["layers/wq"].tolist() == [True, False, False]
+
+
+def test_delta_mode_uses_gradient_change_not_magnitude():
+    """Eq.1: constant large gradients have zero *change* -> they freeze."""
+    params = make_params()
+    spec = build_monitor_spec(params)
+    cfg = GradESConfig(tau=1e-3, alpha=0.0, patience=1, monitor="delta",
+                       normalize=True)
+    st = init_grades_state(params, spec, cfg)
+    g = jax.tree.map(lambda p: jnp.full_like(p, 7.0), params)
+    st, frozen = grades_update(st, g, spec, cfg, total_steps=10)
+    assert float(frozen_fraction(frozen)) == 0.0  # first delta = |7-0| large
+    st, frozen = grades_update(st, g, spec, cfg, total_steps=10)
+    assert float(frozen_fraction(frozen)) == 1.0  # second delta = 0
+
+
+def test_norm_delta_mode_matches_delta_for_constant_grads():
+    params = make_params()
+    spec = build_monitor_spec(params)
+    cfg = GradESConfig(tau=1e-3, alpha=0.0, patience=1, monitor="norm_delta",
+                       normalize=True)
+    st = init_grades_state(params, spec, cfg)
+    assert st.prev == {}  # O(1) memory: no stored gradients
+    g = jax.tree.map(lambda p: jnp.full_like(p, 7.0), params)
+    st, _ = grades_update(st, g, spec, cfg, total_steps=10)
+    st, frozen = grades_update(st, g, spec, cfg, total_steps=10)
+    assert float(frozen_fraction(frozen)) == 1.0
+
+
+def test_freeze_masks_broadcast_shapes():
+    params = make_params()
+    spec = build_monitor_spec(params)
+    cfg = GradESConfig()
+    st = init_grades_state(params, spec, cfg)
+    masks = freeze_masks_for_params(params, spec, st.frozen)
+    assert masks["layers"]["wq"].shape == (L, 1, 1)
+    assert masks["layers"]["attn_norm"].shape == ()  # unmonitored -> scalar False
+    assert masks["embed"].shape == ()
+
+
+def test_tau_overrides_per_component():
+    params = make_params()
+    spec = build_monitor_spec(params)
+    cfg = GradESConfig(tau=1e-9, alpha=0.0, patience=1, normalize=True,
+                       tau_overrides={"layers/wq": 1e9})
+    st = init_grades_state(params, spec, cfg)
+    g1 = jax.tree.map(jnp.ones_like, params)
+    g2 = jax.tree.map(lambda p: jnp.full_like(p, 2.0), params)
+    st, _ = grades_update(st, g1, spec, cfg, total_steps=10)
+    st, frozen = grades_update(st, g2, spec, cfg, total_steps=10)  # delta == 1
+    assert frozen["layers/wq"].all()          # huge tau -> frozen
+    assert not frozen["layers/w_up"].any()    # tiny tau -> never

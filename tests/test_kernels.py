@@ -1,0 +1,113 @@
+"""Pallas kernel sweeps: shapes × dtypes vs the pure-jnp ref.py oracles
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+
+SHAPES_3D = [(1, 8, 128), (4, 64, 256), (3, 33, 96), (2, 256, 512)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES_3D)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_grades_norm_kernel(shape, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    g = jax.random.normal(k1, shape).astype(dtype)
+    prev = jax.random.normal(k2, shape).astype(dtype)
+    norm, new_prev = ops.grades_norm(g, prev)
+    norm_ref, prev_ref = ref.grades_norm_ref(
+        g.reshape(shape[0], -1, 1).astype(jnp.float32),
+        prev.reshape(shape[0], -1, 1).astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(norm), np.asarray(norm_ref),
+                               rtol=2e-3 if dtype == jnp.bfloat16 else 1e-5)
+    assert (np.asarray(new_prev) == np.asarray(g.astype(new_prev.dtype))).all()
+
+
+@pytest.mark.parametrize("shape", [(2, 5, 7, 24), (3, 2, 2, 2, 16)])
+def test_grades_norm_kernel_high_rank(shape):
+    g = jax.random.normal(jax.random.PRNGKey(0), shape)
+    prev = jnp.zeros(shape)
+    norm, _ = ops.grades_norm(g, prev)
+    expect = jnp.abs(g).reshape(shape[0], -1).sum(axis=1)
+    np.testing.assert_allclose(np.asarray(norm), np.asarray(expect), rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(2, 16, 128), (4, 64, 256), (1, 8, 640)])
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("count", [1, 10])
+def test_masked_adamw_kernel(shape, dtype, count):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    p = jax.random.normal(ks[0], shape).astype(dtype)
+    g = jax.random.normal(ks[1], shape).astype(dtype)
+    m = (jax.random.normal(ks[2], shape) * 0.1).astype(jnp.float32)
+    v = (jax.random.uniform(ks[3], shape) * 0.01).astype(jnp.float32)
+    frozen = jnp.arange(shape[0]) % 2 == 1
+    kw = dict(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.01, count=count)
+    got = ops.masked_adamw(p, g, m, v, frozen, **kw)
+    want = ref.masked_adamw_ref(p, g, m, v, frozen, **kw)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    for a, b, name in zip(got, want, "pmv"):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=tol, atol=tol,
+                                   err_msg=name)
+    # frozen rows bit-identical
+    for a, b in zip(got, (p, m, v)):
+        assert (np.asarray(a)[1::2] == np.asarray(b)[1::2]).all()
+
+
+@pytest.mark.parametrize("S,hd,bq,bk", [(128, 32, 32, 32), (128, 64, 64, 32),
+                                        (256, 32, 128, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_flash_attention_kernel(S, hd, bq, bk, causal, dtype):
+    BH = 4
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (BH, S, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (BH, S, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (BH, S, hd)).astype(dtype)
+    got = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    want = ref.flash_attention_ref(q[:, :, None], k[:, :, None], v[:, :, None],
+                                   causal=causal)[:, :, 0]
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,T,D,H,chunk,bB", [(2, 16, 32, 4, 4, 0),
+                                              (4, 32, 64, 4, 8, 2),
+                                              (1, 8, 16, 2, 8, 0),
+                                              (2, 24, 32, 4, 8, 1)])
+def test_slstm_kernel_matches_recurrence(B, T, D, H, chunk, bB):
+    from repro.kernels.slstm import slstm_kernel
+    from repro.models.xlstm import slstm_sequence
+    xp = jax.random.normal(jax.random.PRNGKey(0), (B, T, 4 * D))
+    r = jax.random.normal(jax.random.PRNGKey(1), (4, H, D // H, D // H)) * 0.5
+    h_ref, st_ref = slstm_sequence(xp, r, H)
+    z = jnp.zeros((B, D))
+    m0 = jnp.full((B, D), -1e30)
+    h_k, hT, cT, nT, mT = slstm_kernel(xp, r, z, z, z, m0, n_heads=H,
+                                       chunk=chunk, block_b=bB)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_ref),
+                               rtol=1e-5, atol=1e-5)
+    for a, b in [(hT, st_ref.h), (cT, st_ref.c), (nT, st_ref.n), (mT, st_ref.m)]:
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_slstm_kernel_bf16_weights():
+    from repro.kernels.slstm import slstm_kernel
+    from repro.models.xlstm import slstm_sequence
+    B, T, D, H = 2, 16, 32, 4
+    xp = jax.random.normal(jax.random.PRNGKey(0), (B, T, 4 * D)).astype(jnp.bfloat16)
+    r = (jax.random.normal(jax.random.PRNGKey(1), (4, H, D // H, D // H)) * 0.5
+         ).astype(jnp.bfloat16)
+    h_ref, _ = slstm_sequence(xp, r, H)
+    z = jnp.zeros((B, D))
+    h_k, *_ = slstm_kernel(xp, r, z, z, z, jnp.full((B, D), -1e30), n_heads=H,
+                           chunk=8)
+    np.testing.assert_allclose(np.asarray(h_k, np.float32),
+                               np.asarray(h_ref, np.float32), atol=5e-2)

@@ -1,0 +1,94 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.config import GradESConfig, TrainConfig
+from repro.core.grades import (build_monitor_spec, freeze_masks_for_params,
+                               frozen_fraction, grades_update,
+                               init_grades_state)
+from repro.optim.optimizer import apply_updates, init_opt_state
+
+mats = st.integers(2, 5)
+small_f = st.floats(-4.0, 4.0, allow_nan=False, width=32)
+
+
+def arrays(shape):
+    n = int(np.prod(shape))
+    return st.lists(small_f, min_size=n, max_size=n).map(
+        lambda xs: np.asarray(xs, np.float32).reshape(shape))
+
+
+# ---------------------------------------------------------------------------
+# Paper Appendix A, Theorem 1: element-wise L1 upper-bounds the other norms.
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(m=st.integers(1, 6), n=st.integers(1, 6), data=st.data())
+def test_theorem1_l1_upper_bounds_all_norms(m, n, data):
+    a = data.draw(arrays((m, n)))
+    l11 = np.abs(a).sum()
+    assert np.linalg.norm(a, 2) <= l11 + 1e-4          # spectral
+    assert np.linalg.norm(a, "fro") <= l11 + 1e-4      # Frobenius
+    assert np.abs(a).sum(axis=1).max() <= l11 + 1e-4   # induced inf
+    assert np.abs(a).sum(axis=0).max() <= l11 + 1e-4   # induced 1
+
+
+# ---------------------------------------------------------------------------
+# Freezing is monotone under ANY gradient sequence.
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(data=st.data(), steps=st.integers(2, 6))
+def test_freeze_monotone_any_gradients(data, steps):
+    params = {"layers": {"wq": jnp.zeros((2, 3, 4))}}
+    spec = build_monitor_spec(params)
+    cfg = GradESConfig(tau=data.draw(st.floats(1e-4, 10.0)), alpha=0.0,
+                       patience=1, normalize=True)
+    stt = init_grades_state(params, spec, cfg)
+    prev_frozen = np.zeros(2, bool)
+    for _ in range(steps):
+        g = {"layers": {"wq": jnp.asarray(data.draw(arrays((2, 3, 4))))}}
+        stt, frozen = grades_update(stt, g, spec, cfg, total_steps=steps)
+        now = np.asarray(frozen["layers/wq"])
+        assert (now | prev_frozen == now).all(), "unfroze a frozen matrix"
+        prev_frozen = now
+
+
+# ---------------------------------------------------------------------------
+# Frozen parameters are bit-identical after the optimizer step (Alg.1 line 15).
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_masked_update_preserves_frozen_params(data):
+    params = {"layers": {"wq": jnp.asarray(data.draw(arrays((3, 2, 4))))}}
+    spec = build_monitor_spec(params)
+    tcfg = TrainConfig(lr=1e-2, steps=10, grad_clip=0.0, weight_decay=0.1)
+    opt = init_opt_state(params, tcfg)
+    frozen = {"layers/wq": jnp.asarray(
+        data.draw(st.lists(st.booleans(), min_size=3, max_size=3)))}
+    masks = freeze_masks_for_params(params, spec, frozen)
+    grads = {"layers": {"wq": jnp.asarray(data.draw(arrays((3, 2, 4))))}}
+    new_params, _ = apply_updates(params, grads, opt, tcfg, freeze_masks=masks)
+    before = np.asarray(params["layers"]["wq"])
+    after = np.asarray(new_params["layers"]["wq"])
+    fz = np.asarray(frozen["layers/wq"])
+    assert (after[fz] == before[fz]).all()
+    moved = np.abs(np.asarray(grads["layers"]["wq"])[~fz]).sum() > 0
+    if moved:
+        assert not (after[~fz] == before[~fz]).all()
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback compression: errors never accumulate unboundedly.
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_compression_error_bounded(data):
+    from repro.distributed.compression import compress_with_feedback
+    g = {"w": jnp.asarray(data.draw(arrays((4, 4))))}
+    err = {"w": jnp.zeros((4, 4))}
+    scale = float(np.abs(np.asarray(g["w"])).max()) + 1e-9
+    for _ in range(5):
+        deq, err = compress_with_feedback(g, err)
+        # quantization error of one round is at most one int8 bucket
+        assert float(np.abs(np.asarray(err["w"])).max()) <= scale / 127.0 + 1e-6

@@ -1,0 +1,73 @@
+"""HLO walker unit tests on hand-written HLO text with known counts."""
+import pytest
+
+from repro.launch.roofline import (_shape_bytes, analyze_hlo, collective_bytes,
+                                   derive_terms)
+
+HLO = """
+HloModule test
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.1), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add
+  ROOT %t = (s32[], f32[8,16]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %i0 = s32[] constant(0)
+  %t0 = (s32[], f32[8,16]) tuple(%i0, %a)
+  %w2 = (s32[], f32[8,16]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  %ag = f32[16,16]{1,0} all-gather(%a), channel_id=2, replica_groups=[1,8]<=[8], dimensions={0}
+  %dotx = f32[8,16]{1,0} dot(%a, %ag), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert _shape_bytes("bf16[4,32,64]") == 4 * 32 * 64 * 2
+    assert _shape_bytes("(s32[], f32[2,2])") == 4 + 16
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_walker_flops_with_trip_count():
+    out = analyze_hlo(HLO)
+    # loop dot: 2*8*16*16 = 4096 flops, 5 trips; entry dot: 2*8*16*16 = 4096
+    assert out["flops"] == 5 * 4096 + 4096
+
+
+def test_walker_collectives_with_trip_count():
+    out = analyze_hlo(HLO)
+    ar = 8 * 16 * 4          # all-reduce inside the loop, 5 trips
+    ag = 16 * 16 * 4         # all-gather outside
+    assert out["coll_bytes"] == 5 * ar + ag
+    assert out["per_kind"]["all-reduce"]["count"] == 5
+    assert out["per_kind"]["all-gather"]["count"] == 1
+
+
+def test_flat_collective_scan():
+    total, per_kind = collective_bytes(HLO)
+    assert per_kind["all-reduce"]["count"] == 1  # flat: no trip expansion
+    assert per_kind["all-gather"]["count"] == 1
+
+
+def test_derive_terms_bottleneck():
+    t = derive_terms(arch="a", shape="s", mesh_name="single", chips=256,
+                     cost={}, hlo_text=HLO, model_flops=1e12,
+                     bytes_per_chip=1e9)
+    assert t.bottleneck in ("compute", "memory", "collective")
+    assert t.step_time_s == max(t.compute_s, t.memory_s, t.collective_s)
+    assert 0 <= t.roofline_frac

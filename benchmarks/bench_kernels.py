@@ -1,9 +1,26 @@
 """Kernel microbenchmarks: Pallas (interpret) vs pure-jnp oracle, plus the
 analytic HBM-traffic advantage the kernels were written for (the interpret-mode
-wall time is NOT TPU time; the traffic model is the transferable number)."""
+wall time is NOT TPU time; the traffic model is the transferable number).
+
+The fused-step section compares one GradES step over a stacked parameter —
+monitor norm (Eq. 1) + frozen-gated optimizer update — through the kernel
+dispatch path vs the jnp reference, sweeping the frozen fraction.  Off-TPU the
+measured column is interpret-mode emulation (flagged as such); the modeled
+column is the HBM roofline both paths would hit on hardware:
+
+* jnp monitor: ~4 passes over the gradient bytes (sub, abs-reduce, prev copy);
+  fused ``grades_norm``: 2 reads + 1 write regardless of freeze state.
+* jnp update: XLA's ``where`` streams p/g/m/v and rewrites p/m/v for every
+  layer (7 passes); fused ``masked_adamw`` pays that only for live layers —
+  frozen layers cost one SMEM flag load (no-op writes under aliasing).
+
+Results land in ``artifacts/bench/kernels.json`` and a repo-level
+``BENCH_kernels.json`` so the perf trajectory is tracked in-tree.
+"""
 from __future__ import annotations
 
 import json
+import os
 import time
 
 import jax
@@ -11,6 +28,11 @@ import jax.numpy as jnp
 
 from benchmarks.common import out_path
 from repro.kernels import ops, ref
+
+#: HBM bandwidth used for the roofline model (TPU v4-class, bytes/s).
+HBM_BW = 1.2e12
+
+REPO_BENCH = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
 
 
 def _time(fn, *args, reps=3):
@@ -20,6 +42,64 @@ def _time(fn, *args, reps=3):
         r = fn(*args)
         jax.tree.leaves(r)[0].block_until_ready()
     return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _fused_step_rows(reps=5):
+    """One GradES step (monitor + masked update) for a stacked (L, M, N) leaf,
+    fused dispatch path vs jnp reference, at frozen fractions 0 / 0.5 / 1."""
+    L, M, N = 8, 256, 1024
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    p = jax.random.normal(ks[0], (L, M, N))
+    g = jax.random.normal(ks[1], (L, M, N))
+    m = jax.random.normal(ks[2], (L, M, N)) * 0.1
+    v = jax.random.uniform(ks[3], (L, M, N)) * 0.01
+    prev = jax.random.normal(ks[4], (L, M, N))
+    kw = dict(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.01)
+    on_tpu = jax.default_backend() == "tpu"
+
+    @jax.jit
+    def fused_step(p, g, m, v, prev, flags, lr, count):
+        norm, new_prev = ops.grades_norm(g, prev, interpret=not on_tpu)
+        pn, mn, vn = ops.masked_adamw(p, g, m, v, flags, lr, count,
+                                      interpret=not on_tpu, **kw)
+        return pn, mn, vn, norm, new_prev
+
+    @jax.jit
+    def jnp_step(p, g, m, v, prev, flags, lr, count):
+        norm = jnp.sum(jnp.abs(g - prev), axis=(1, 2))
+        pn, mn, vn = ref.masked_adamw_ref(p, g, m, v, flags, lr=lr,
+                                          count=count, **kw)
+        return pn, mn, vn, norm, g
+
+    bytes_leaf = p.size * p.dtype.itemsize
+    rows = []
+    for frac in (0.0, 0.5, 1.0):
+        flags = jnp.arange(L) < int(frac * L)
+        args = (p, g, m, v, prev, flags, 1e-3, 5.0)
+        fused_us = _time(lambda *a: fused_step(*a), *args, reps=reps)
+        jnp_us = _time(lambda *a: jnp_step(*a), *args, reps=reps)
+        # HBM roofline: monitor (all layers) + update (live layers only for
+        # the fused kernel; every layer for the jnp where-update).
+        fused_bytes = bytes_leaf * (3 + 7 * (1.0 - frac))
+        jnp_bytes = bytes_leaf * (4 + 7)
+        fused_model = fused_bytes / HBM_BW * 1e6
+        jnp_model = jnp_bytes / HBM_BW * 1e6
+        rows.append({
+            "name": f"fused_step_vs_jnp/frozen_{frac}",
+            "frozen_frac": frac,
+            "fused_us": round(fused_us if on_tpu else fused_model, 3),
+            "jnp_us": round(jnp_us if on_tpu else jnp_model, 3),
+            "speedup": round((jnp_us / fused_us) if on_tpu
+                             else (jnp_model / fused_model), 3),
+            "modeled_fused_us": round(fused_model, 3),
+            "modeled_jnp_us": round(jnp_model, 3),
+            "measured_fused_us": round(fused_us, 1),
+            "measured_jnp_us": round(jnp_us, 1),
+            "measured_is_emulation": not on_tpu,
+            "shape": [L, M, N],
+            "hbm_bw_model": HBM_BW,
+        })
+    return rows
 
 
 def run():
@@ -43,14 +123,15 @@ def run():
     m = jnp.zeros_like(p)
     v = jnp.zeros_like(p)
     frozen = jnp.array([False, True, False, True])
-    kw = dict(lr=1e-3, weight_decay=0.01, count=1)
+    kw = dict(weight_decay=0.01)
     rows.append({
         "name": "masked_adamw/pallas-interpret",
         "us_per_call": round(_time(
-            lambda *a: ops.masked_adamw(*a, **kw), p, g, m, v, frozen), 1),
-        "derived": "frozen layers: flag load only"})
+            lambda *a: ops.masked_adamw(*a, 1e-3, 1, **kw), p, g, m, v,
+            frozen), 1),
+        "derived": "frozen layers: flag load only; lr/count dynamic"})
     ref_fn = jax.jit(lambda *a: ref.masked_adamw_ref(
-        *a, b1=0.9, b2=0.95, eps=1e-8, **kw))
+        *a, lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, count=1, **kw))
     rows.append({
         "name": "masked_adamw/jnp",
         "us_per_call": round(_time(ref_fn, p, g, m, v, frozen), 1),
@@ -73,8 +154,20 @@ def run():
         "us_per_call": round(_time(ref_attn, q, k, vv), 1),
         "derived": "O(S^2) score memory"})
 
+    step_rows = _fused_step_rows()
+    rows.extend(step_rows)
+
     with open(out_path("kernels.json"), "w") as f:
         json.dump(rows, f, indent=1)
+    with open(REPO_BENCH, "w") as f:
+        json.dump({
+            "bench": "fused GradES step (monitor + masked update) vs jnp",
+            "backend": jax.default_backend(),
+            "note": ("off-TPU the us/speedup columns are the HBM-roofline "
+                     "model (measured_* are interpret-mode emulation, not "
+                     "TPU time); on TPU they are measured"),
+            "rows": step_rows,
+        }, f, indent=1)
     return rows
 
 

@@ -193,6 +193,11 @@ class TrainConfig:
     eps: float = 1e-8
     grad_clip: float = 1.0
     opt_state_dtype: str = "float32"     # "bfloat16" for 1T-scale configs
+    # kernel backend for the fused GradES monitor + masked-update hot path:
+    # "pallas" forces the fused kernels (interpret mode off-TPU), "jnp" forces
+    # the pure-XLA reference path, "auto" picks pallas on TPU and jnp elsewhere
+    # (DESIGN.md §3).
+    kernels: str = "auto"                # "pallas" | "jnp" | "auto"
     # early stopping baselines
     grades: GradESConfig = field(default_factory=GradESConfig)
     lora: Optional[LoRAConfig] = None

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.grades import MonitorSpec, get_path, set_path
+from repro.core.grades import MonitorSpec, _key_path
 
 
 def fully_frozen_types(frozen_host: Dict[str, "np.ndarray"]) -> FrozenSet[str]:
@@ -29,26 +29,29 @@ def fully_frozen_types(frozen_host: Dict[str, "np.ndarray"]) -> FrozenSet[str]:
     return frozenset(name for name, m in frozen_host.items() if bool(np.all(m)))
 
 
+def _static_paths(spec: MonitorSpec, static_frozen: AbstractSet[str]):
+    return {p for name in static_frozen if name in spec.groups
+            for p in spec.groups[name][0]}
+
+
 def static_freeze_tree(params, spec: MonitorSpec,
                        static_frozen: AbstractSet[str]):
-    """Apply stop_gradient to every param path of the statically-frozen groups."""
-    out = params
-    for name in sorted(static_frozen):
-        if name not in spec.groups:
-            continue
-        for path in spec.groups[name][0]:
-            out = set_path(out, path, jax.lax.stop_gradient(get_path(out, path)))
-    return out
+    """Apply stop_gradient to every param path of the statically-frozen groups
+    (one flatten/unflatten pass, not a per-path nested-dict rebuild)."""
+    frozen_paths = _static_paths(spec, static_frozen)
+    if not frozen_paths:
+        return params
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    leaves = [jax.lax.stop_gradient(leaf) if _key_path(kp) in frozen_paths
+              else leaf for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 def trainable_mask(params, spec: MonitorSpec,
                    static_frozen: AbstractSet[str]):
     """Bool pytree: False for statically-frozen params (used to drop optimizer
     state slots for frozen types — the Tier-1 memory saving)."""
-    mask = jax.tree.map(lambda _: True, params)
-    for name in sorted(static_frozen):
-        if name not in spec.groups:
-            continue
-        for path in spec.groups[name][0]:
-            mask = set_path(mask, path, False)
-    return mask
+    frozen_paths = _static_paths(spec, static_frozen)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    leaves = [_key_path(kp) not in frozen_paths for kp, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Production kernel layer (DESIGN.md §3): the fused GradES monitor
+# (grades_norm), frozen-gated optimizer updates (masked_adamw/masked_sgd),
+# flash attention and the sLSTM scan, with pure-jnp oracles in ref.py and the
+# backend-aware routing in dispatch.py (pallas | jnp | auto).  The train step
+# reaches these through repro.kernels.dispatch, never directly.

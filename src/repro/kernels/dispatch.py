@@ -1,0 +1,122 @@
+"""Kernel dispatch layer: route the GradES hot path to Pallas or jnp (DESIGN.md §3).
+
+The train step's per-parameter work — the Eq.-1 monitor norm and the masked
+optimizer update — has two interchangeable implementations:
+
+* the fused Pallas kernels (:mod:`repro.kernels.grades_norm`,
+  :mod:`repro.kernels.masked_adamw`), which hit the roofline minimum of HBM
+  passes and skip frozen layers entirely, and
+* the pure-jnp reference path (:func:`repro.optim.optimizer.apply_updates`'s
+  ``where``-masked update), which works for any leaf shape.
+
+``resolve_backend(tcfg.kernels)`` picks once per (re)jit: ``"pallas"`` forces
+the kernels (interpret mode when not on TPU, so CPU tests exercise the same
+code path), ``"jnp"`` forces the reference, and ``"auto"`` uses the kernels on
+TPU and jnp elsewhere (interpret-mode Pallas is an emulation, not a win, for
+production CPU runs).
+
+Per-*group* selection then happens leaf by leaf: a monitored parameter is
+``fused_eligible`` when it is a stacked ``(gran..., trailing...)`` tensor whose
+leading axes match the group's freeze-flag shape — everything else (ragged,
+non-stacked, unmonitored) falls back to jnp within the same step.
+
+Known restriction (DESIGN.md §3): ``pallas_call`` carries no GSPMD
+partitioning rule, so the fused path targets single-device meshes today;
+sharded multi-device runs should select ``kernels="jnp"`` until the kernel
+calls are shard_map-wrapped.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+BACKEND_CHOICES = ("pallas", "jnp", "auto")
+
+
+@dataclass(frozen=True)
+class KernelBackend:
+    """Resolved backend: static per compiled step (a re-jit picks it up)."""
+
+    kind: str         # "pallas" | "jnp"
+    interpret: bool   # Pallas interpret mode (True anywhere but real TPU)
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.kind == "pallas"
+
+
+def resolve_backend(choice: str = "auto", platform: str | None = None) -> KernelBackend:
+    if choice not in BACKEND_CHOICES:
+        raise ValueError(f"kernels must be one of {BACKEND_CHOICES}, got {choice!r}")
+    platform = platform or jax.default_backend()
+    on_tpu = platform == "tpu"
+    if choice == "jnp":
+        return KernelBackend("jnp", False)
+    if choice == "pallas":
+        return KernelBackend("pallas", interpret=not on_tpu)
+    return KernelBackend("pallas", False) if on_tpu else KernelBackend("jnp", False)
+
+
+def fused_eligible(leaf, flags_shape) -> bool:
+    """A leaf can take the fused kernels iff its leading axes are the freeze
+    granularity axes (stacked layout) and there is a trailing extent to tile."""
+    gran = len(flags_shape)
+    return (leaf.ndim > gran and tuple(leaf.shape[:gran]) == tuple(flags_shape)
+            and leaf.size > 0)
+
+
+def _collapse_gran(x, gran: int):
+    """(g0, g1, ..., rest...) -> (g0*g1*..., rest...) for the kernels' leading-L
+    layout; gran-2 expert tensors become one freeze row per (layer, expert)."""
+    lead = math.prod(x.shape[:gran])
+    return x.reshape((lead,) + x.shape[gran:])
+
+
+def fused_grades_norm(g, prev, gran: int, backend: KernelBackend):
+    """Fused Eq.-1 monitor: returns (unnormalized L1 delta-norm with shape
+    ``g.shape[:gran]``, new_prev shaped like ``g``) in one kernel pass."""
+    gran_shape = g.shape[:gran]
+    norm, new_prev = ops.grades_norm(_collapse_gran(g, gran),
+                                     _collapse_gran(prev, gran),
+                                     interpret=backend.interpret)
+    return norm.reshape(gran_shape), new_prev.reshape(g.shape)
+
+
+def fused_masked_update(p, g, m, v, flags, lr, count, tcfg,
+                        backend: KernelBackend):
+    """Fused frozen-gated optimizer update for one stacked leaf.
+
+    ``flags`` is the group's boolean freeze array (shape = leading ``gran``
+    axes of ``p``); ``lr``/``count`` are *dynamic* operands — no recompile
+    under a schedule.  Returns (p', m', v') with frozen rows bit-identical.
+    """
+    gran = flags.ndim
+    shape = p.shape
+    c = lambda x: _collapse_gran(x, gran)
+    if tcfg.optimizer == "sgd":
+        p3, m3 = ops.masked_sgd(
+            c(p), c(g), c(m), flags.reshape(-1), lr,
+            b1=tcfg.b1, weight_decay=tcfg.weight_decay,
+            interpret=backend.interpret)
+        return p3.reshape(shape), m3.reshape(shape), v
+    p3, m3, v3 = ops.masked_adamw(
+        c(p), c(g), c(m), c(v), flags.reshape(-1), lr, count,
+        b1=tcfg.b1, b2=tcfg.b2, eps=tcfg.eps, weight_decay=tcfg.weight_decay,
+        interpret=backend.interpret)
+    return p3.reshape(shape), m3.reshape(shape), v3.reshape(shape)
+
+
+def moments_fusable(m, v, p, optimizer: str) -> bool:
+    """Tier-1 placeholder moments (1-element stubs) cannot stream through the
+    kernels — but those leaves are statically frozen and never reach the fused
+    path anyway; this guards the dispatch decision."""
+    if m.shape != p.shape:
+        return False
+    if optimizer != "sgd" and v.shape != p.shape:
+        return False
+    return True

@@ -68,8 +68,22 @@ def global_norm(tree) -> jax.Array:
 
 def apply_updates(params, grads, opt: OptState, tcfg: TrainConfig, *,
                   freeze_masks=None, trainable=None,
-                  lr: Optional[jax.Array] = None):
-    """Returns (new_params, new_opt).  ``freeze_masks``: True = GradES-frozen."""
+                  lr: Optional[jax.Array] = None,
+                  spec=None, group_frozen=None, backend=None):
+    """Returns (new_params, new_opt).  ``freeze_masks``: True = GradES-frozen.
+
+    Fused path (DESIGN.md §3): when ``spec`` (a MonitorSpec), ``group_frozen``
+    (the per-group freeze flags from ``grades_update``) and a Pallas ``backend``
+    are given, every stacked monitored leaf goes through the frozen-gated
+    ``masked_adamw``/``masked_sgd`` kernel — frozen layers cost one SMEM flag
+    load instead of streaming p/m/v/g — with dynamic ``lr``/``count`` operands
+    (no recompile under a schedule).  Non-stacked / ragged / unmonitored leaves
+    fall back to the jnp ``where``-masked update below, per leaf, in the same
+    call.
+    """
+    from repro.core.grades import _key_path, broadcast_mask
+    from repro.kernels import dispatch as _dispatch
+
     count = opt.count + 1
     lr = lr_at(count, tcfg) if lr is None else lr
     if tcfg.grad_clip:
@@ -78,7 +92,12 @@ def apply_updates(params, grads, opt: OptState, tcfg: TrainConfig, *,
         grads = jax.tree.map(lambda g: g * scale, grads)
     if trainable is None:
         trainable = jax.tree.map(lambda _: True, params)
-    if freeze_masks is None:
+    use_pallas = (backend is not None and backend.use_pallas
+                  and spec is not None and group_frozen is not None
+                  and tcfg.optimizer in ("adamw", "sgd"))
+    if freeze_masks is None and (spec is None or group_frozen is None):
+        # No per-group flags to build masks from lazily below: default to an
+        # all-live mask tree.
         freeze_masks = jax.tree.map(lambda _: jnp.zeros((), bool), params)
 
     def upd(p, g, m, v, mask, train):
@@ -105,16 +124,31 @@ def apply_updates(params, grads, opt: OptState, tcfg: TrainConfig, *,
         return (p_new.astype(p.dtype), m_new.astype(dt),
                 v_new.astype(dt) if v.size > 1 else v)
 
-    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_kp, treedef = jax.tree_util.tree_flatten_with_path(params)
+    paths = [_key_path(kp) for kp, _ in flat_kp]
+    flat_p = [leaf for _, leaf in flat_kp]
     flat_g = treedef.flatten_up_to(grads)
     flat_m = treedef.flatten_up_to(opt.m)
     flat_v = treedef.flatten_up_to(opt.v)
-    flat_mask = treedef.flatten_up_to(freeze_masks)
+    flat_mask = (treedef.flatten_up_to(freeze_masks)
+                 if freeze_masks is not None else [None] * len(flat_p))
     flat_train = treedef.flatten_up_to(trainable)
+    p2g = spec.path_to_group if spec is not None else {}
     new_p, new_m, new_v = [], [], []
-    for p, g, m, v, mask, train in zip(flat_p, flat_g, flat_m, flat_v,
-                                       flat_mask, flat_train):
-        pn, mn, vn = upd(p, g, m, v, mask, train)
+    for path, p, g, m, v, mask, train in zip(paths, flat_p, flat_g, flat_m,
+                                             flat_v, flat_mask, flat_train):
+        group = p2g.get(path) if group_frozen is not None else None
+        flags = group_frozen[group] if group is not None else None
+        if (use_pallas and train and flags is not None
+                and _dispatch.fused_eligible(p, flags.shape)
+                and _dispatch.moments_fusable(m, v, p, tcfg.optimizer)):
+            pn, mn, vn = _dispatch.fused_masked_update(
+                p, g, m, v, flags, lr, count, tcfg, backend)
+        else:
+            if mask is None:
+                mask = (broadcast_mask(flags, p) if flags is not None
+                        else jnp.zeros((), bool))
+            pn, mn, vn = upd(p, g, m, v, mask, train)
         new_p.append(pn)
         new_m.append(mn)
         new_v.append(vn)

@@ -29,6 +29,7 @@ from repro.config import ModelConfig, TrainConfig
 from repro.core.grades import build_monitor_spec
 from repro.core.partition import fully_frozen_types
 from repro.data.pipeline import make_batches
+from repro.kernels.dispatch import resolve_backend
 from repro.train.state import TrainState, init_train_state
 from repro.train.step import make_eval_step, make_train_step
 
@@ -76,8 +77,12 @@ class Trainer:
         state = self._resume(state if state is not None else self.init_state())
         spec = build_monitor_spec(state.params, lora=tcfg.lora is not None)
         static_frozen = fully_frozen_types(jax.device_get(state.grades.frozen))
-        step_fn = jax.jit(make_train_step(cfg, tcfg, spec, static_frozen),
-                          donate_argnums=0)
+        # Kernel backend is resolved once per run (static across Tier-1
+        # re-jits); per-group fused-vs-jnp selection happens inside the step.
+        backend = resolve_backend(tcfg.kernels)
+        step_fn = jax.jit(
+            make_train_step(cfg, tcfg, spec, static_frozen, backend=backend),
+            donate_argnums=0)
         eval_fn = jax.jit(make_eval_step(cfg, tcfg)) if val_batches else None
         if batches is None:
             batches = make_batches(cfg, tcfg)
@@ -124,7 +129,8 @@ class Trainer:
                 if now_frozen - static_frozen:
                     static_frozen = frozenset(now_frozen)
                     step_fn = jax.jit(
-                        make_train_step(cfg, tcfg, spec, static_frozen),
+                        make_train_step(cfg, tcfg, spec, static_frozen,
+                                        backend=backend),
                         donate_argnums=0)
                     recompiles += 1
 

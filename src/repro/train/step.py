@@ -16,11 +16,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, TrainConfig
-from repro.core.grades import (MonitorSpec, all_frozen, freeze_masks_for_params,
-                               frozen_fraction, grades_update)
+from repro.core.grades import (MonitorSpec, all_frozen, frozen_fraction,
+                               grades_update)
 from repro.core.lora import merge_lora
 from repro.core.partition import static_freeze_tree, trainable_mask
 from repro.distributed.compression import compress_with_feedback
+from repro.kernels.dispatch import KernelBackend, resolve_backend
 from repro.models import model
 from repro.optim.optimizer import apply_updates, global_norm, lr_at
 
@@ -33,8 +34,14 @@ def _loss(params, base_params, batch, cfg: ModelConfig, tcfg: TrainConfig):
 
 
 def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
-                    static_frozen: AbstractSet[str] = frozenset()):
+                    static_frozen: AbstractSet[str] = frozenset(),
+                    backend: Optional[KernelBackend] = None):
+    """``backend`` (resolved from ``tcfg.kernels`` when None) selects the fused
+    Pallas monitor+update pipeline or the jnp reference path, per stacked group
+    (DESIGN.md §3).  It is static per compiled step — the Tier-1 re-jit in the
+    loop reuses the same backend."""
     static_frozen = frozenset(static_frozen)
+    backend = resolve_backend(tcfg.kernels) if backend is None else backend
 
     def grads_of(params, base_params, batch):
         def f(p):
@@ -69,12 +76,12 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
             grads, ef_error = compress_with_feedback(grads, ef_error)
 
         grades, frozen = grades_update(state.grades, grads, spec, tcfg.grades,
-                                       tcfg.steps)
-        masks = freeze_masks_for_params(params, spec, frozen)
+                                       tcfg.steps, backend=backend)
         trainable = trainable_mask(params, spec, static_frozen)
         new_params, new_opt = apply_updates(params, grads, state.opt, tcfg,
-                                            freeze_masks=masks,
-                                            trainable=trainable)
+                                            trainable=trainable, spec=spec,
+                                            group_frozen=frozen,
+                                            backend=backend)
         metrics = dict(metrics)
         metrics["grad_norm"] = global_norm(grads)
         metrics["frozen_frac"] = frozen_fraction(frozen)

@@ -1,0 +1,193 @@
+"""Kernel-dispatch layer: fused-vs-jnp parity, per-group fallback, and the
+no-per-step-recompile guarantees (DESIGN.md §3).
+
+Parity sweeps both monitor modes × AdamW/SGD through several steps of the
+real ``grades_update`` + ``apply_updates`` pipeline with the Pallas backend
+(interpret mode on CPU — same kernel bodies as TPU) against the jnp reference,
+including frozen layers staying bit-identical and ragged/unmonitored leaves
+falling back cleanly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import GradESConfig, TrainConfig
+from repro.core.grades import (build_monitor_spec, grades_update,
+                               init_grades_state)
+from repro.core.partition import trainable_mask
+from repro.kernels import dispatch, ops
+from repro.optim.optimizer import apply_updates, init_opt_state
+
+L = 3
+
+
+def make_params():
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 4)
+    return {
+        "embed": jax.random.normal(ks[0], (16, 8)),       # unmonitored
+        "layers": {
+            "wq": jax.random.normal(ks[1], (L, 8, 16)),
+            "w_up": jax.random.normal(ks[2], (L, 8, 16)),
+            "w_gate": jax.random.normal(ks[3], (L, 2, 8, 16)),  # gran-2 experts
+        },
+        "final_norm": jnp.zeros((8,)),                    # unmonitored
+    }
+
+
+def grad_seq(params, i):
+    # Big grads for two steps, then near-identical ones so delta-mode freezes.
+    scale = 1.0 if i < 2 else 1e-3
+    return jax.tree.map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(i), p.shape) * scale,
+        params)
+
+
+def test_resolve_backend():
+    assert dispatch.resolve_backend("jnp").kind == "jnp"
+    pal = dispatch.resolve_backend("pallas", platform="cpu")
+    assert pal.use_pallas and pal.interpret
+    tpu = dispatch.resolve_backend("auto", platform="tpu")
+    assert tpu.use_pallas and not tpu.interpret
+    assert dispatch.resolve_backend("auto", platform="cpu").kind == "jnp"
+    with pytest.raises(ValueError):
+        dispatch.resolve_backend("cuda")
+
+
+def test_fused_eligibility():
+    x = jnp.zeros((4, 8, 16))
+    assert dispatch.fused_eligible(x, (4,))
+    assert dispatch.fused_eligible(jnp.zeros((4, 2, 8, 16)), (4, 2))
+    assert not dispatch.fused_eligible(x, (3,))      # flag/leading mismatch
+    assert not dispatch.fused_eligible(jnp.zeros((4,)), (4,))  # no trailing dim
+
+
+@pytest.mark.parametrize("monitor", ["delta", "norm_delta"])
+@pytest.mark.parametrize("optimizer", ["adamw", "sgd"])
+def test_fused_matches_jnp_over_steps(monitor, optimizer):
+    params = make_params()
+    spec = build_monitor_spec(params)
+    gcfg = GradESConfig(enabled=True, tau=1e-1, alpha=0.0, patience=1,
+                        monitor=monitor, normalize=True)
+    tcfg = TrainConfig(optimizer=optimizer, lr=1e-2, steps=10, grades=gcfg,
+                       weight_decay=0.01, grad_clip=1.0)
+    pal = dispatch.resolve_backend("pallas")   # interpret on CPU
+    ref = dispatch.resolve_backend("jnp")
+
+    stA, stB = (init_grades_state(params, spec, gcfg) for _ in range(2))
+    optA, optB = (init_opt_state(params, tcfg) for _ in range(2))
+    pA = pB = params
+    froze = False
+    for i in range(4):
+        g = grad_seq(params, i)
+        stA, frA = grades_update(stA, g, spec, gcfg, 10, backend=pal)
+        stB, frB = grades_update(stB, g, spec, gcfg, 10, backend=ref)
+        for n in frA:
+            assert (np.asarray(frA[n]) == np.asarray(frB[n])).all()
+            np.testing.assert_allclose(np.asarray(stA.last_norm[n]),
+                                       np.asarray(stB.last_norm[n]),
+                                       rtol=1e-4, err_msg=n)
+        prev_pA = pA
+        pA, optA = apply_updates(pA, g, optA, tcfg, spec=spec,
+                                 group_frozen=frA, backend=pal)
+        pB, optB = apply_updates(pB, g, optB, tcfg, spec=spec,
+                                 group_frozen=frB, backend=ref)
+        # frozen layers stay bit-identical through the fused path
+        for name in ("wq", "w_up"):
+            fz = np.asarray(frA[f"layers/{name}"])
+            if fz.any():
+                froze = True
+                before = np.asarray(prev_pA["layers"][name])[fz]
+                after = np.asarray(pA["layers"][name])[fz]
+                assert (before == after).all()
+    assert froze, "test never exercised a frozen layer"
+    for a, b, what in ((pA, pB, "params"), (optA.m, optB.m, "m"),
+                      (optA.v, optB.v, "v")):
+        for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_allclose(np.asarray(la, np.float32),
+                                       np.asarray(lb, np.float32),
+                                       rtol=2e-5, atol=2e-6, err_msg=what)
+
+
+def test_tier1_placeholder_moments_skip_fused_path():
+    """Statically-frozen leaves hold 1-element moment stubs: the dispatch must
+    leave them untouched rather than streaming them through the kernel."""
+    params = make_params()
+    spec = build_monitor_spec(params)
+    tcfg = TrainConfig(lr=1e-2, steps=10, grad_clip=0.0)
+    static = frozenset(["layers/wq"])
+    trainable = trainable_mask(params, spec, static)
+    opt = init_opt_state(params, tcfg, trainable)
+    assert opt.m["layers"]["wq"].shape == (1,)
+    g = grad_seq(params, 0)
+    frozen = {n: jnp.zeros(spec.mask_shape(params, n), bool)
+              for n in spec.groups}
+    pal = dispatch.resolve_backend("pallas")
+    new_p, new_opt = apply_updates(params, g, opt, tcfg, trainable=trainable,
+                                   spec=spec, group_frozen=frozen, backend=pal)
+    assert (np.asarray(new_p["layers"]["wq"])
+            == np.asarray(params["layers"]["wq"])).all()
+    assert new_opt.m["layers"]["wq"].shape == (1,)
+    assert not (np.asarray(new_p["layers"]["w_up"])
+                == np.asarray(params["layers"]["w_up"])).all()
+
+
+def test_no_recompile_across_lr_schedule():
+    """Satellite regression: lr/count are dynamic operands — a 10-step cosine
+    schedule compiles the masked update exactly once per shape bucket."""
+    jax.clear_caches()
+    L_, M_, N_ = 2, 8, 128
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    p = jax.random.normal(ks[0], (L_, M_, N_))
+    g = jax.random.normal(ks[1], (L_, M_, N_))
+    m = jax.random.normal(ks[2], (L_, M_, N_)) * 0.1
+    v = jax.random.uniform(ks[3], (L_, M_, N_)) * 0.01
+    frozen = jnp.array([False, True])
+    steps = 10
+    for t in range(1, steps + 1):
+        lr = 1e-3 * 0.5 * (1 + np.cos(np.pi * t / steps))  # cosine schedule
+        p, m, v = ops.masked_adamw(p, g, m, v, frozen, lr, t,
+                                   weight_decay=0.01)
+    assert ops.masked_adamw._cache_size() == 1
+    for t in range(1, steps + 1):
+        p, m = ops.masked_sgd(p, g, m, frozen, 1e-3 * t)
+    assert ops.masked_sgd._cache_size() == 1
+
+
+def test_train_step_compiles_once_under_schedule():
+    """Step-level: 10 steps with the cosine schedule and the Pallas backend
+    trace/compile the jitted train step exactly once."""
+    import repro.configs as configs
+    from repro.data.pipeline import make_batches
+    from repro.train.state import init_train_state
+    from repro.train.step import make_train_step
+
+    cfg = configs.reduced("qwen3-0.6b")
+    tcfg = TrainConfig(seq_len=16, global_batch=2, steps=10, lr=3e-3,
+                       schedule="cosine", kernels="pallas",
+                       grades=GradESConfig(enabled=True, tau=1e-2, alpha=0.2,
+                                           patience=1))
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    spec = build_monitor_spec(state.params)
+    backend = dispatch.resolve_backend(tcfg.kernels)
+    step = jax.jit(make_train_step(cfg, tcfg, spec, backend=backend))
+    lrs = []
+    for batch in make_batches(cfg, tcfg, steps=10):
+        state, metrics = step(state, batch)
+        lrs.append(float(metrics["lr"]))
+    assert step._cache_size() == 1
+    assert len(set(lrs)) > 1, "schedule did not vary lr"
+
+
+def test_grades_update_fused_writes_prev_in_kernel_dtype():
+    params = {"layers": {"wq": jnp.ones((2, 4, 8))}}
+    spec = build_monitor_spec(params)
+    gcfg = GradESConfig(enabled=True, monitor="delta", alpha=0.0)
+    st = init_grades_state(params, spec, gcfg)
+    g = jax.tree.map(lambda p: p * 0.5, params)
+    st, _ = grades_update(st, g, spec, gcfg, 10,
+                          backend=dispatch.resolve_backend("pallas"))
+    prev = st.prev[("layers", "wq")]
+    assert prev.dtype == jnp.bfloat16
+    assert (np.asarray(prev, np.float32) == 0.5).all()

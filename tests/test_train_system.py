@@ -33,6 +33,7 @@ def _tcfg(**kw):
     return TrainConfig(**base)
 
 
+@pytest.mark.slow
 def test_grades_freezes_and_improves_over_budget():
     tcfg = _tcfg(steps=200, grades=GradESConfig(
         enabled=True, tau=4e-3, alpha=0.3, normalize=True, patience=2))
@@ -51,6 +52,7 @@ def test_grades_all_frozen_terminates_early():
     assert res.steps_run < 60  # grace = 30, huge tau freezes right after
 
 
+@pytest.mark.slow
 def test_frozen_matrices_stop_moving():
     tcfg = _tcfg(steps=60, grades=GradESConfig(
         enabled=True, tau=1e3, alpha=0.2, normalize=True, patience=1,
@@ -105,6 +107,7 @@ def test_lora_grades_pairs():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_bit_identical():
     d = tempfile.mkdtemp()
     try:

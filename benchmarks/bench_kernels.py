@@ -21,6 +21,8 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -102,6 +104,104 @@ def _fused_step_rows(reps=5):
     return rows
 
 
+#: subprocess body for the sharded sweep: the shard-mapped fused step vs the
+#: jnp reference on a host (2 data, 4 model) mesh of 8 placeholder CPU
+#: devices (the main bench process keeps its single-device view).
+_SHARDED_BENCH = """
+import json, time
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.config import TrainConfig
+from repro.kernels import dispatch, ref
+
+HBM_BW = %(hbm_bw)r
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+n_dev = mesh.devices.size
+backend = dispatch.KernelBackend("pallas", interpret=True, mesh=mesh,
+                                 forced=True)
+tcfg = TrainConfig(optimizer="adamw", lr=1e-3, weight_decay=0.01,
+                   b1=0.9, b2=0.95, eps=1e-8)
+pspec = P(None, "data", "model")
+L, M, N = 8, 256, 1024
+ks = jax.random.split(jax.random.PRNGKey(7), 5)
+sh = NamedSharding(mesh, pspec)
+p, g, m, v, prev = (jax.device_put(jax.random.normal(k, (L, M, N)), sh)
+                    for k in ks)
+
+@jax.jit
+def fused_step(p, g, m, v, prev, flags, lr, count):
+    norm, new_prev = dispatch.fused_grades_norm(g, prev, 1, backend, pspec)
+    pn, mn, vn = dispatch.fused_masked_update(p, g, m, v, flags, lr, count,
+                                              tcfg, backend, pspec)
+    return pn, mn, vn, norm, new_prev
+
+@jax.jit
+def jnp_step(p, g, m, v, prev, flags, lr, count):
+    norm = jnp.sum(jnp.abs(g - prev), axis=(1, 2))
+    pn, mn, vn = ref.masked_adamw_ref(p, g, m, v, flags, lr=lr, count=count,
+                                      b1=0.9, b2=0.95, eps=1e-8,
+                                      weight_decay=0.01)
+    return pn, mn, vn, norm, g
+
+def timed(fn, args, reps=3):
+    jax.tree.leaves(fn(*args))[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.tree.leaves(fn(*args))[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+bytes_leaf = p.size * p.dtype.itemsize
+rows = []
+for frac in (0.0, 0.5, 1.0):
+    flags = jnp.arange(L) < int(frac * L)
+    args = (p, g, m, v, prev, flags, 1e-3, 5.0)
+    fused_us = timed(fused_step, args)
+    jnp_us = timed(jnp_step, args)
+    # per-device HBM roofline: each of the n_dev shards streams 1/n_dev of the
+    # leaf bytes in parallel; pass counts as in the single-device model.
+    fused_model = bytes_leaf * (3 + 7 * (1.0 - frac)) / n_dev / HBM_BW * 1e6
+    jnp_model = bytes_leaf * (4 + 7) / n_dev / HBM_BW * 1e6
+    rows.append({
+        "name": "sharded_fused_step_vs_jnp/frozen_%%s" %% frac,
+        "frozen_frac": frac,
+        "mesh": [2, 4],
+        "fused_us": round(fused_model, 3),
+        "jnp_us": round(jnp_model, 3),
+        "speedup": round(jnp_model / fused_model, 3),
+        "modeled_fused_us": round(fused_model, 3),
+        "modeled_jnp_us": round(jnp_model, 3),
+        "measured_fused_us": round(fused_us, 1),
+        "measured_jnp_us": round(jnp_us, 1),
+        "measured_is_emulation": True,
+        "shape": [L, M, N],
+        "hbm_bw_model": HBM_BW,
+    })
+print("JSON_ROWS " + json.dumps(rows))
+"""
+
+
+def _sharded_step_rows():
+    """Host-8-device shard-mapped sweep, run in a subprocess so this process
+    keeps its single-device view (same pattern as tests/test_distributed.py).
+    On TPU the in-process mesh is the real benchmark; this sweep tracks the
+    shard_map dispatch overhead/parity trend on the CPU emulation."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=src)
+    code = _SHARDED_BENCH % {"hbm_bw": HBM_BW}
+    try:
+        out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                             text=True, timeout=900, env=env)
+        if out.returncode != 0:
+            raise RuntimeError(out.stderr[-500:])
+        return json.loads(out.stdout.split("JSON_ROWS", 1)[1])
+    except Exception as e:  # keep the rest of the bench usable anywhere
+        return [{"name": "sharded_fused_step_vs_jnp/unavailable",
+                 "note": str(e)[:500]}]
+
+
 def run():
     rows = []
     L, M, N = 4, 256, 1024
@@ -156,6 +256,8 @@ def run():
 
     step_rows = _fused_step_rows()
     rows.extend(step_rows)
+    sharded_rows = _sharded_step_rows()
+    rows.extend(sharded_rows)
 
     with open(out_path("kernels.json"), "w") as f:
         json.dump(rows, f, indent=1)
@@ -167,6 +269,11 @@ def run():
                      "model (measured_* are interpret-mode emulation, not "
                      "TPU time); on TPU they are measured"),
             "rows": step_rows,
+            "sharded_note": ("shard-mapped fused step on a host (2 data, "
+                             "4 model) mesh of 8 placeholder CPU devices; "
+                             "modeled columns are the per-device HBM "
+                             "roofline, measured are emulation"),
+            "sharded_rows": sharded_rows,
         }, f, indent=1)
     return rows
 

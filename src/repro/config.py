@@ -194,8 +194,10 @@ class TrainConfig:
     grad_clip: float = 1.0
     opt_state_dtype: str = "float32"     # "bfloat16" for 1T-scale configs
     # kernel backend for the fused GradES monitor + masked-update hot path:
-    # "pallas" forces the fused kernels (interpret mode off-TPU), "jnp" forces
-    # the pure-XLA reference path, "auto" picks pallas on TPU and jnp elsewhere
+    # "pallas" forces the fused kernels (interpret mode off-TPU; warns once
+    # and falls back per leaf on layouts the shard mapper can't take), "jnp"
+    # forces the pure-XLA reference path, "auto" picks pallas on TPU — shard-
+    # mapped over the active mesh when it has >1 device — and jnp elsewhere
     # (DESIGN.md §3).
     kernels: str = "auto"                # "pallas" | "jnp" | "auto"
     # early stopping baselines

@@ -162,7 +162,7 @@ def _group_l1(g, gran: int, normalize: bool):
 
 
 def grades_update(state: GradESState, grads, spec: MonitorSpec, cfg: GradESConfig,
-                  total_steps: int, *, backend=None
+                  total_steps: int, *, backend=None, param_specs=None
                   ) -> Tuple[GradESState, Dict[str, jax.Array]]:
     """One Algorithm-1 iteration.  Returns (new state, per-group freeze masks).
 
@@ -176,6 +176,12 @@ def grades_update(state: GradESState, grads, spec: MonitorSpec, cfg: GradESConfi
     writing back ``prev`` — instead of jnp's ≥4 HBM passes.  Ragged leaves and
     ``norm_delta`` mode (already a single streaming reduce under XLA) keep the
     jnp path; parity is kernel-tested.
+
+    ``param_specs`` (path -> :class:`~jax.sharding.PartitionSpec`, from
+    ``distributed.sharding.param_partition_specs``) is required for the fused
+    path under a sharded backend: each leaf's kernel is shard_map'd over its
+    spec, with the partial per-row norms psum'd over trailing-dim mesh axes.
+    Leaves without a usable spec fall back to jnp.
     """
     from repro.kernels import dispatch as _dispatch
 
@@ -183,6 +189,7 @@ def grades_update(state: GradESState, grads, spec: MonitorSpec, cfg: GradESConfi
     grace = jnp.int32(jnp.ceil(cfg.alpha * total_steps))
     active = (step > grace) & jnp.bool_(cfg.enabled)
     use_pallas = backend is not None and backend.use_pallas
+    param_specs = param_specs or {}
 
     new_frozen, new_below, new_prev, new_pn, new_ln = {}, {}, {}, {}, {}
     for name, (paths, gran) in spec.groups.items():
@@ -191,9 +198,10 @@ def grades_update(state: GradESState, grads, spec: MonitorSpec, cfg: GradESConfi
             gran_shape = state.frozen[name].shape
             for p in paths:
                 g = get_path(grads, p)
-                if use_pallas and _dispatch.fused_eligible(g, gran_shape):
+                if use_pallas and _dispatch.fused_ok(g, gran_shape, backend,
+                                                     param_specs.get(p)):
                     raw, new_prev[p] = _dispatch.fused_grades_norm(
-                        g, state.prev[p], gran, backend)
+                        g, state.prev[p], gran, backend, param_specs.get(p))
                     if cfg.normalize:
                         raw = raw / _norm_divisor(g.shape, gran)
                     norm = norm + raw

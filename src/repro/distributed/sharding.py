@@ -14,7 +14,7 @@ from __future__ import annotations
 import contextlib
 import threading
 from dataclasses import dataclass, field
-from typing import Mapping, Optional, Sequence, Tuple, Union
+from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -105,13 +105,31 @@ def active_mesh() -> Optional[Mesh]:
     return _ctx.mesh
 
 
-def _axis_size(mesh: Mesh, axes: Union[str, Tuple[str, ...]]) -> int:
+def active_rules() -> ShardingRules:
+    return _ctx.rules
+
+
+def mesh_axis_size(mesh: Mesh, axes: Union[str, Tuple[str, ...], None]) -> int:
+    """Product of the named mesh-axis extents (``None`` -> 1).
+
+    The one place the ``axis name -> extent`` view of a mesh is built; shared by
+    ``logical_to_spec``'s divisibility check and the shard_map kernel dispatch
+    (``kernels/dispatch.py``) so both agree on what a mapping shards over.
+    """
+    if axes is None:
+        return 1
     if isinstance(axes, str):
         axes = (axes,)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     n = 1
     for a in axes:
-        n *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+        n *= sizes[a]
     return n
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    """Extent of the tensor-parallel "model" axis (1 when the mesh lacks one)."""
+    return mesh_axis_size(mesh, "model") if "model" in mesh.axis_names else 1
 
 
 def logical_to_spec(logical_axes: Sequence[Logical],
@@ -125,7 +143,7 @@ def logical_to_spec(logical_axes: Sequence[Logical],
     for i, name in enumerate(logical_axes):
         resolved = rules.resolve(name)
         if resolved is not None and shape is not None and mesh is not None:
-            if shape[i] % _axis_size(mesh, resolved) != 0:
+            if shape[i] % mesh_axis_size(mesh, resolved) != 0:
                 resolved = None
         out.append(resolved)
     while out and out[-1] is None:
@@ -147,3 +165,32 @@ def named_sharding(logical_axes: Sequence[Logical], shape: Sequence[int],
     mesh = mesh or _ctx.mesh
     assert mesh is not None, "named_sharding requires a mesh"
     return NamedSharding(mesh, logical_to_spec(logical_axes, shape, mesh, rules))
+
+
+def param_partition_specs(params, logical_axes,
+                          mesh: Optional[Mesh] = None,
+                          rules: Optional[ShardingRules] = None
+                          ) -> Dict[Tuple[str, ...], P]:
+    """Per-parameter ``PartitionSpec``s keyed by tree path.
+
+    Resolves each leaf of ``logical_axes`` (the ``model.param_logical_axes``
+    tree, a prefix structure of ``params``) against the mesh with the same
+    divisibility rule as ``logical_to_spec``.  This is the spec tree the kernel
+    dispatch layer threads down to its ``shard_map`` wrappers — the same
+    resolution the launcher uses for state shardings (``launch/specs.py``), so
+    the kernels always see the layout the data actually has.
+
+    ``params`` may hold arrays or ``ShapeDtypeStruct``s (only ``.shape`` is
+    read); paths use the same string keys as ``core.grades``.
+    """
+    from repro.core.grades import _key_path  # one path-key derivation everywhere
+
+    mesh = mesh or _ctx.mesh
+    rules = rules or _ctx.rules
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    axes_leaves = treedef.flatten_up_to(logical_axes)
+    out: Dict[Tuple[str, ...], P] = {}
+    for (kp, leaf), ax in zip(flat, axes_leaves):
+        out[_key_path(kp)] = logical_to_spec(ax, shape=leaf.shape, mesh=mesh,
+                                             rules=rules)
+    return out

@@ -1,4 +1,5 @@
-"""Kernel dispatch layer: route the GradES hot path to Pallas or jnp (DESIGN.md §3).
+"""Kernel dispatch layer: route the GradES hot path to Pallas or jnp, on any
+mesh (DESIGN.md §3).
 
 The train step's per-parameter work — the Eq.-1 monitor norm and the masked
 optimizer update — has two interchangeable implementations:
@@ -12,27 +13,49 @@ optimizer update — has two interchangeable implementations:
 ``resolve_backend(tcfg.kernels)`` picks once per (re)jit: ``"pallas"`` forces
 the kernels (interpret mode when not on TPU, so CPU tests exercise the same
 code path), ``"jnp"`` forces the reference, and ``"auto"`` uses the kernels on
-TPU and jnp elsewhere (interpret-mode Pallas is an emulation, not a win, for
-production CPU runs).
+TPU — including sharded multi-device meshes — and jnp elsewhere
+(interpret-mode Pallas is an emulation, not a win, for production CPU runs).
 
 Per-*group* selection then happens leaf by leaf: a monitored parameter is
 ``fused_eligible`` when it is a stacked ``(gran..., trailing...)`` tensor whose
 leading axes match the group's freeze-flag shape — everything else (ragged,
 non-stacked, unmonitored) falls back to jnp within the same step.
 
-Known restriction (DESIGN.md §3): ``pallas_call`` carries no GSPMD
-partitioning rule, so the fused path targets single-device meshes today;
-sharded multi-device runs should select ``kernels="jnp"`` until the kernel
-calls are shard_map-wrapped.
+Sharded dispatch
+----------------
+``pallas_call`` has no GSPMD partitioning rule, so under a multi-device mesh
+every fused call is wrapped in :func:`jax.experimental.shard_map.shard_map`
+over the leaf's :class:`~jax.sharding.PartitionSpec` (derived from the model's
+logical-axis tree — ``distributed.sharding.param_partition_specs``):
+
+* the elementwise ``masked_adamw``/``masked_sgd`` kernels run unchanged on
+  each shard; the tiny ``(L,)``/``(L, E)`` freeze flags ride in replicated and
+  are sliced inside the shard when a granularity axis itself lands on a mesh
+  axis;
+* ``grades_norm`` computes a *partial* per-layer L1 delta-norm over its local
+  trailing-dim shard and the wrapper ``psum``s the partials over exactly the
+  mesh axes that shard trailing dims, keeping Eq. 1 consistent with the
+  single-device path.
+
+Layouts the shard mapper cannot handle (no spec recorded for the leaf, a mesh
+axis reused across dims, a granularity extent that does not divide its mesh
+axes) fall back to jnp per leaf; when ``kernels="pallas"`` was *forced*, a
+one-time warning names the first such layout instead of silently compiling
+the kernel with replication.
 """
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.sharding import active_mesh, mesh_axis_size
 from repro.kernels import ops
 
 BACKEND_CHOICES = ("pallas", "jnp", "auto")
@@ -44,22 +67,38 @@ class KernelBackend:
 
     kind: str         # "pallas" | "jnp"
     interpret: bool   # Pallas interpret mode (True anywhere but real TPU)
+    #: multi-device mesh the kernel calls shard_map over (None = single device)
+    mesh: Optional[Mesh] = None
+    #: True when the user forced "pallas" (drives the fallback warning)
+    forced: bool = False
 
     @property
     def use_pallas(self) -> bool:
         return self.kind == "pallas"
 
+    @property
+    def sharded(self) -> bool:
+        return self.mesh is not None
 
-def resolve_backend(choice: str = "auto", platform: str | None = None) -> KernelBackend:
+
+def resolve_backend(choice: str = "auto", platform: str | None = None,
+                    mesh: Optional[Mesh] = None) -> KernelBackend:
+    """``mesh`` defaults to the active ``use_mesh`` context; single-device
+    meshes are treated as no mesh (the kernels need no wrapping there)."""
     if choice not in BACKEND_CHOICES:
         raise ValueError(f"kernels must be one of {BACKEND_CHOICES}, got {choice!r}")
     platform = platform or jax.default_backend()
     on_tpu = platform == "tpu"
+    mesh = active_mesh() if mesh is None else mesh
+    if mesh is not None and mesh.devices.size <= 1:
+        mesh = None
     if choice == "jnp":
         return KernelBackend("jnp", False)
     if choice == "pallas":
-        return KernelBackend("pallas", interpret=not on_tpu)
-    return KernelBackend("pallas", False) if on_tpu else KernelBackend("jnp", False)
+        return KernelBackend("pallas", interpret=not on_tpu, mesh=mesh,
+                             forced=True)
+    return (KernelBackend("pallas", False, mesh) if on_tpu
+            else KernelBackend("jnp", False))
 
 
 def fused_eligible(leaf, flags_shape) -> bool:
@@ -70,6 +109,86 @@ def fused_eligible(leaf, flags_shape) -> bool:
             and leaf.size > 0)
 
 
+# ---------------------------------------------------------------------------
+# Sharded-layout vetting
+# ---------------------------------------------------------------------------
+
+def _pad_spec(pspec: Optional[P], ndim: int) -> Tuple:
+    """A PartitionSpec padded with None to one entry per array dim."""
+    parts = tuple(pspec) if pspec is not None else ()
+    return parts + (None,) * (ndim - len(parts))
+
+
+def _part_axes(part) -> Tuple[str, ...]:
+    if part is None:
+        return ()
+    return (part,) if isinstance(part, str) else tuple(part)
+
+
+def shard_restriction(leaf, gran: int, pspec: Optional[P],
+                      mesh: Mesh) -> Optional[str]:
+    """Why the shard mapper cannot take this (leaf, spec) — None when it can.
+
+    The derivation path (``param_partition_specs`` -> ``logical_to_spec``)
+    only emits dividing specs, so in practice this rejects leaves with *no*
+    recorded spec (e.g. LoRA trees) and hand-built specs that reuse a mesh
+    axis or leave a granularity row ragged across its shards.
+    """
+    if pspec is None:
+        return "no PartitionSpec recorded for leaf"
+    if len(tuple(pspec)) > leaf.ndim:
+        return (f"PartitionSpec has {len(tuple(pspec))} entries for a "
+                f"{leaf.ndim}-d leaf")
+    parts = _pad_spec(pspec, leaf.ndim)
+    seen = set()
+    for part in parts:
+        for a in _part_axes(part):
+            if a in seen:
+                return f"mesh axis {a!r} reused across dims"
+            if a not in mesh.axis_names:
+                return f"unknown mesh axis {a!r}"
+            seen.add(a)
+    for d, part in enumerate(parts):
+        n = mesh_axis_size(mesh, _part_axes(part) or None)
+        if leaf.shape[d] % n != 0:
+            kind = "granularity" if d < gran else "trailing"
+            return (f"{kind} dim {d} ({leaf.shape[d]}) not divisible by its "
+                    f"mesh axes ({n})")
+    return None
+
+
+_warned_fallbacks: set = set()
+
+
+def _warn_forced_fallback(backend: KernelBackend, reason: str) -> None:
+    if backend.forced and reason not in _warned_fallbacks:
+        _warned_fallbacks.add(reason)
+        warnings.warn(
+            f"kernels='pallas' forced, but a leaf's layout cannot be "
+            f"shard-mapped ({reason}); falling back to the jnp path for such "
+            f"leaves instead of compiling the kernel with replication.",
+            RuntimeWarning, stacklevel=3)
+
+
+def fused_ok(leaf, flags_shape, backend: KernelBackend,
+             pspec: Optional[P]) -> bool:
+    """The single dispatch predicate: stacked layout + (under a mesh) a layout
+    the shard mapper handles.  Warns once per reason when pallas was forced."""
+    if not fused_eligible(leaf, flags_shape):
+        return False
+    if not backend.sharded:
+        return True
+    reason = shard_restriction(leaf, len(flags_shape), pspec, backend.mesh)
+    if reason is not None:
+        _warn_forced_fallback(backend, reason)
+        return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Fused calls (single-device bodies + shard_map wrappers)
+# ---------------------------------------------------------------------------
+
 def _collapse_gran(x, gran: int):
     """(g0, g1, ..., rest...) -> (g0*g1*..., rest...) for the kernels' leading-L
     layout; gran-2 expert tensors become one freeze row per (layer, expert)."""
@@ -77,9 +196,31 @@ def _collapse_gran(x, gran: int):
     return x.reshape((lead,) + x.shape[gran:])
 
 
-def fused_grades_norm(g, prev, gran: int, backend: KernelBackend):
-    """Fused Eq.-1 monitor: returns (unnormalized L1 delta-norm with shape
-    ``g.shape[:gran]``, new_prev shaped like ``g``) in one kernel pass."""
+def _slice_flags(flags, gran_parts, mesh: Mesh):
+    """Restrict replicated freeze flags to this shard's granularity rows.
+
+    For each granularity dim that lands on mesh axes, the local row range is
+    ``[idx * local, (idx+1) * local)`` where ``idx`` linearizes the device's
+    coordinates along those axes in the same row-major order GSPMD uses for a
+    tuple entry of a PartitionSpec.
+    """
+    for d, part in enumerate(gran_parts):
+        axes = _part_axes(part)
+        if not axes:
+            continue
+        idx = jnp.int32(0)
+        size = 1
+        for a in axes:
+            idx = idx * mesh_axis_size(mesh, a) + jax.lax.axis_index(a)
+            size *= mesh_axis_size(mesh, a)
+        local = flags.shape[d] // size
+        flags = jax.lax.dynamic_slice_in_dim(flags, idx * local, local, axis=d)
+    return flags
+
+
+def _local_grades_norm(g, prev, gran: int, backend: KernelBackend):
+    """Single-shard Eq.-1 body: (partial norm shaped ``g.shape[:gran]``,
+    new_prev shaped like ``g``) in one kernel pass."""
     gran_shape = g.shape[:gran]
     norm, new_prev = ops.grades_norm(_collapse_gran(g, gran),
                                      _collapse_gran(prev, gran),
@@ -87,14 +228,37 @@ def fused_grades_norm(g, prev, gran: int, backend: KernelBackend):
     return norm.reshape(gran_shape), new_prev.reshape(g.shape)
 
 
-def fused_masked_update(p, g, m, v, flags, lr, count, tcfg,
-                        backend: KernelBackend):
-    """Fused frozen-gated optimizer update for one stacked leaf.
+def fused_grades_norm(g, prev, gran: int, backend: KernelBackend,
+                      pspec: Optional[P] = None):
+    """Fused Eq.-1 monitor: returns (unnormalized L1 delta-norm with shape
+    ``g.shape[:gran]``, new_prev shaped like ``g``).
 
-    ``flags`` is the group's boolean freeze array (shape = leading ``gran``
-    axes of ``p``); ``lr``/``count`` are *dynamic* operands — no recompile
-    under a schedule.  Returns (p', m', v') with frozen rows bit-identical.
+    Under a sharded backend the kernel runs per shard via shard_map: each
+    shard reduces its local trailing elements, then partials are ``psum``'d
+    over exactly the mesh axes that shard trailing dims, so the result equals
+    the single-device norm (up to float reduction order).
     """
+    if not backend.sharded:
+        return _local_grades_norm(g, prev, gran, backend)
+    mesh = backend.mesh
+    parts = _pad_spec(pspec, g.ndim)
+    trailing_axes = tuple(a for part in parts[gran:] for a in _part_axes(part))
+
+    def local(g_l, prev_l):
+        norm, new_prev = _local_grades_norm(g_l, prev_l, gran, backend)
+        if trailing_axes:
+            norm = jax.lax.psum(norm, trailing_axes)
+        return norm, new_prev
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(*parts), P(*parts)),
+                     out_specs=(P(*parts[:gran]), P(*parts)),
+                     check_rep=False)(g, prev)
+
+
+def _local_masked_update(p, g, m, v, flags, lr, count, tcfg,
+                         backend: KernelBackend):
+    """Single-shard frozen-gated optimizer update for one stacked leaf."""
     gran = flags.ndim
     shape = p.shape
     c = lambda x: _collapse_gran(x, gran)
@@ -109,6 +273,54 @@ def fused_masked_update(p, g, m, v, flags, lr, count, tcfg,
         b1=tcfg.b1, b2=tcfg.b2, eps=tcfg.eps, weight_decay=tcfg.weight_decay,
         interpret=backend.interpret)
     return p3.reshape(shape), m3.reshape(shape), v3.reshape(shape)
+
+
+def fused_masked_update(p, g, m, v, flags, lr, count, tcfg,
+                        backend: KernelBackend, pspec: Optional[P] = None):
+    """Fused frozen-gated optimizer update for one stacked leaf.
+
+    ``flags`` is the group's boolean freeze array (shape = leading ``gran``
+    axes of ``p``); ``lr``/``count`` are *dynamic* operands — no recompile
+    under a schedule.  Returns (p', m', v') with frozen rows bit-identical.
+
+    Under a sharded backend the update is elementwise per shard, so the
+    kernel runs unchanged inside shard_map; the flags enter replicated and
+    are sliced to the shard's granularity rows when a granularity axis lands
+    on a mesh axis.  ``lr``/``count`` stay replicated scalars.
+    """
+    if not backend.sharded:
+        return _local_masked_update(p, g, m, v, flags, lr, count, tcfg, backend)
+    mesh = backend.mesh
+    gran = flags.ndim
+    parts = _pad_spec(pspec, p.ndim)
+    tsp, rep = P(*parts), P()
+    lr = jnp.asarray(lr, jnp.float32)
+    count = jnp.asarray(count, jnp.float32)
+
+    if tcfg.optimizer == "sgd":
+        # SGD carries its (placeholder) v through untouched — keep it out of
+        # the mapped body so its 1-element shape never meets the leaf spec.
+        def local_sgd(p_l, g_l, m_l, flags_full, lr_l):
+            fl = _slice_flags(flags_full, parts[:gran], mesh)
+            p3, m3, _ = _local_masked_update(p_l, g_l, m_l, None, fl, lr_l,
+                                             None, tcfg, backend)
+            return p3, m3
+
+        p3, m3 = shard_map(local_sgd, mesh=mesh,
+                           in_specs=(tsp, tsp, tsp, rep, rep),
+                           out_specs=(tsp, tsp),
+                           check_rep=False)(p, g, m, flags, lr)
+        return p3, m3, v
+
+    def local(p_l, g_l, m_l, v_l, flags_full, lr_l, count_l):
+        fl = _slice_flags(flags_full, parts[:gran], mesh)
+        return _local_masked_update(p_l, g_l, m_l, v_l, fl, lr_l, count_l,
+                                    tcfg, backend)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(tsp, tsp, tsp, tsp, rep, rep, rep),
+                     out_specs=(tsp, tsp, tsp),
+                     check_rep=False)(p, g, m, v, flags, lr, count)
 
 
 def moments_fusable(m, v, p, optimizer: str) -> bool:

@@ -16,6 +16,11 @@ Grid: (L, M/bm, N/bn), sequential on TPU, so the (1,1) accumulator block for lay
 Block shapes default to (256, 512) — 512 KiB of bf16 per input tile, comfortably
 inside the ~16 MiB VMEM budget with double buffering, and both dims are multiples
 of the 8×128 VREG lane layout.
+
+Under a sharded mesh this kernel runs once per shard (shard_map in
+``kernels/dispatch.py``) over the *local* (L, M, N): the returned ``norm`` is
+then a partial sum over the shard's trailing elements, and the dispatch layer
+psums partials over the mesh axes that shard trailing dims to recover Eq. 1.
 """
 from __future__ import annotations
 

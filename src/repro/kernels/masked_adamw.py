@@ -16,6 +16,11 @@ aliasing on hardware).
 
 Grid (L, M/bm, N/bn); flags and hyper use full-array (ANY) specs so the
 predicate is known before the tile's DMAs are issued.
+
+The update is elementwise, so under a sharded mesh the kernel body runs
+unchanged per shard (shard_map in ``kernels/dispatch.py``); ``frozen`` then
+holds the rows of this shard only — the dispatch layer slices the replicated
+global flags by the device's coordinates along the granularity mesh axes.
 """
 from __future__ import annotations
 

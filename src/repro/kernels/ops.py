@@ -8,6 +8,11 @@ kernels' ``hyper`` vector: a 10-step cosine-schedule run compiles each
 (shape, dtype) bucket exactly once (regression-tested in
 ``tests/test_dispatch.py``).  Only true structure (shapes, interpret mode,
 moment betas baked into nothing) stays static.
+
+Under a sharded backend these wrappers are invoked *per shard* from inside the
+dispatch layer's ``shard_map`` (``kernels/dispatch.py``): they only ever see
+local shapes, so the ``_canon3`` layout and block sizing below adapt to the
+shard extents, and nothing here may assume the global array shape.
 """
 from __future__ import annotations
 

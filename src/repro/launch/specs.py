@@ -16,7 +16,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.config import GradESConfig, ModelConfig, ShapeCell, TrainConfig
 from repro.core.grades import _flatten_with_paths, build_monitor_spec
 from repro.data.pipeline import batch_specs
-from repro.distributed.sharding import ShardingRules, logical_to_spec
+from repro.distributed.sharding import (ShardingRules, logical_to_spec,
+                                        model_axis_size)
 from repro.launch.mesh import rules_for
 from repro.models import model
 from repro.train.state import init_train_state
@@ -81,7 +82,7 @@ def train_cell_specs(cfg: ModelConfig, tcfg: TrainConfig, mesh, rules=None):
     state_sds = jax.eval_shape(
         lambda k: init_train_state(k, cfg, tcfg), key)
 
-    msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    msize = model_axis_size(mesh)
     axes = model.param_logical_axes(cfg, msize)
     params_sh = _shard_tree(state_sds.params, axes, mesh, rules)
     flat_param_sh = _flatten_with_paths(params_sh)
@@ -155,7 +156,7 @@ def serve_cell_specs(cfg: ModelConfig, cell: ShapeCell, mesh, rules=None):
     rules = rules or rules_for(mesh)
     key = jax.random.PRNGKey(0)
     params_sds = jax.eval_shape(lambda k: model.init_params(k, cfg), key)
-    msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    msize = model_axis_size(mesh)
     params_sh = _shard_tree(params_sds, model.param_logical_axes(cfg, msize), mesh,
                             rules)
 

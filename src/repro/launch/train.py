@@ -47,6 +47,9 @@ def main():
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--mesh", choices=["none", "single", "multi"], default="none")
+    ap.add_argument("--kernels", default="auto", choices=["auto", "pallas", "jnp"],
+                    help="GradES hot-path backend; auto = fused Pallas on TPU "
+                         "(shard-mapped over the mesh), jnp elsewhere")
     ap.add_argument("--log", default="")
     args = ap.parse_args()
 
@@ -57,7 +60,7 @@ def main():
         seq, batch = cell.seq_len, cell.global_batch
     tcfg = TrainConfig(
         seq_len=seq, global_batch=batch, steps=args.steps, lr=args.lr,
-        optimizer=args.optimizer, remat=args.remat,
+        optimizer=args.optimizer, remat=args.remat, kernels=args.kernels,
         lora=LoRAConfig(rank=args.lora_rank) if args.lora_rank else None,
         val_es=args.val_es,
         checkpoint_dir=args.ckpt, checkpoint_every=args.ckpt_every,

@@ -69,7 +69,8 @@ def global_norm(tree) -> jax.Array:
 def apply_updates(params, grads, opt: OptState, tcfg: TrainConfig, *,
                   freeze_masks=None, trainable=None,
                   lr: Optional[jax.Array] = None,
-                  spec=None, group_frozen=None, backend=None):
+                  spec=None, group_frozen=None, backend=None,
+                  param_specs=None):
     """Returns (new_params, new_opt).  ``freeze_masks``: True = GradES-frozen.
 
     Fused path (DESIGN.md §3): when ``spec`` (a MonitorSpec), ``group_frozen``
@@ -80,6 +81,10 @@ def apply_updates(params, grads, opt: OptState, tcfg: TrainConfig, *,
     (no recompile under a schedule).  Non-stacked / ragged / unmonitored leaves
     fall back to the jnp ``where``-masked update below, per leaf, in the same
     call.
+
+    ``param_specs`` (path -> PartitionSpec) drives the shard_map wrapping of
+    the kernels under a sharded backend; leaves without a usable spec take the
+    jnp path (one-time warning when pallas was forced).
     """
     from repro.core.grades import _key_path, broadcast_mask
     from repro.kernels import dispatch as _dispatch
@@ -134,16 +139,19 @@ def apply_updates(params, grads, opt: OptState, tcfg: TrainConfig, *,
                  if freeze_masks is not None else [None] * len(flat_p))
     flat_train = treedef.flatten_up_to(trainable)
     p2g = spec.path_to_group if spec is not None else {}
+    param_specs = param_specs or {}
     new_p, new_m, new_v = [], [], []
     for path, p, g, m, v, mask, train in zip(paths, flat_p, flat_g, flat_m,
                                              flat_v, flat_mask, flat_train):
         group = p2g.get(path) if group_frozen is not None else None
         flags = group_frozen[group] if group is not None else None
         if (use_pallas and train and flags is not None
-                and _dispatch.fused_eligible(p, flags.shape)
+                and _dispatch.fused_ok(p, flags.shape, backend,
+                                       param_specs.get(path))
                 and _dispatch.moments_fusable(m, v, p, tcfg.optimizer)):
             pn, mn, vn = _dispatch.fused_masked_update(
-                p, g, m, v, flags, lr, count, tcfg, backend)
+                p, g, m, v, flags, lr, count, tcfg, backend,
+                param_specs.get(path))
         else:
             if mask is None:
                 mask = (broadcast_mask(flags, p) if flags is not None

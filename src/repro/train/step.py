@@ -21,6 +21,8 @@ from repro.core.grades import (MonitorSpec, all_frozen, frozen_fraction,
 from repro.core.lora import merge_lora
 from repro.core.partition import static_freeze_tree, trainable_mask
 from repro.distributed.compression import compress_with_feedback
+from repro.distributed.sharding import (active_rules, model_axis_size,
+                                        param_partition_specs)
 from repro.kernels.dispatch import KernelBackend, resolve_backend
 from repro.models import model
 from repro.optim.optimizer import apply_updates, global_norm, lr_at
@@ -35,13 +37,36 @@ def _loss(params, base_params, batch, cfg: ModelConfig, tcfg: TrainConfig):
 
 def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
                     static_frozen: AbstractSet[str] = frozenset(),
-                    backend: Optional[KernelBackend] = None):
+                    backend: Optional[KernelBackend] = None,
+                    param_specs=None):
     """``backend`` (resolved from ``tcfg.kernels`` when None) selects the fused
     Pallas monitor+update pipeline or the jnp reference path, per stacked group
     (DESIGN.md §3).  It is static per compiled step — the Tier-1 re-jit in the
-    loop reuses the same backend."""
+    loop reuses the same backend.
+
+    Under a multi-device mesh (picked up from the ``use_mesh`` context at
+    factory time) the fused kernels are shard_map'd over each leaf's
+    PartitionSpec.  ``param_specs`` (path -> spec) may be passed explicitly;
+    when None it is derived once, at first trace, from the model's
+    logical-axis tree against the backend's mesh — the same resolution the
+    launcher uses for state shardings.  LoRA parameter trees carry no
+    logical-axis table, so sharded LoRA runs keep the jnp path per leaf.
+    """
     static_frozen = frozenset(static_frozen)
     backend = resolve_backend(tcfg.kernels) if backend is None else backend
+    mesh = backend.mesh
+    rules = active_rules() if mesh is not None else None
+    _derived: Dict[str, Any] = {}
+
+    def specs_for(params):
+        if param_specs is not None:
+            return param_specs
+        if mesh is None or not backend.use_pallas or tcfg.lora is not None:
+            return None
+        if "specs" not in _derived:
+            axes = model.param_logical_axes(cfg, model_axis_size(mesh))
+            _derived["specs"] = param_partition_specs(params, axes, mesh, rules)
+        return _derived["specs"]
 
     def grads_of(params, base_params, batch):
         def f(p):
@@ -75,13 +100,16 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
         if tcfg.grad_compression == "int8_ef" and ef_error is not None:
             grads, ef_error = compress_with_feedback(grads, ef_error)
 
+        pspecs = specs_for(params)
         grades, frozen = grades_update(state.grades, grads, spec, tcfg.grades,
-                                       tcfg.steps, backend=backend)
+                                       tcfg.steps, backend=backend,
+                                       param_specs=pspecs)
         trainable = trainable_mask(params, spec, static_frozen)
         new_params, new_opt = apply_updates(params, grads, state.opt, tcfg,
                                             trainable=trainable, spec=spec,
                                             group_frozen=frozen,
-                                            backend=backend)
+                                            backend=backend,
+                                            param_specs=pspecs)
         metrics = dict(metrics)
         metrics["grad_norm"] = global_norm(grads)
         metrics["frozen_frac"] = frozen_fraction(frozen)

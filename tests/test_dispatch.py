@@ -44,15 +44,122 @@ def grad_seq(params, i):
         params)
 
 
+def _trivial_mesh(axes=("data", "model")):
+    """A 1-device mesh shaped like the production (data, model) layout: enough
+    to drive the shard_map plumbing in a single-device tier-1 process."""
+    dev = np.asarray(jax.devices()[:1]).reshape((1,) * len(axes))
+    return jax.sharding.Mesh(dev, axes)
+
+
 def test_resolve_backend():
     assert dispatch.resolve_backend("jnp").kind == "jnp"
     pal = dispatch.resolve_backend("pallas", platform="cpu")
-    assert pal.use_pallas and pal.interpret
+    assert pal.use_pallas and pal.interpret and pal.forced
     tpu = dispatch.resolve_backend("auto", platform="tpu")
-    assert tpu.use_pallas and not tpu.interpret
+    assert tpu.use_pallas and not tpu.interpret and not tpu.forced
     assert dispatch.resolve_backend("auto", platform="cpu").kind == "jnp"
     with pytest.raises(ValueError):
         dispatch.resolve_backend("cuda")
+
+
+def test_resolve_backend_mesh_aware():
+    mesh = _trivial_mesh()
+    # single-device meshes need no shard_map wrapping: mesh is dropped
+    assert dispatch.resolve_backend("pallas", platform="cpu",
+                                    mesh=mesh).mesh is None
+    assert not dispatch.resolve_backend("auto", platform="tpu",
+                                        mesh=mesh).sharded
+    # a FakeMesh with >1 devices is kept: auto now selects the shard-mapped
+    # fused path on TPU (previously the known-broken config)
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.zeros((2, 4))
+    auto = dispatch.resolve_backend("auto", platform="tpu", mesh=FakeMesh())
+    assert auto.use_pallas and auto.sharded
+    forced = dispatch.resolve_backend("pallas", platform="cpu", mesh=FakeMesh())
+    assert forced.use_pallas and forced.sharded and forced.forced
+    # off-TPU auto keeps the jnp path even under a mesh
+    assert dispatch.resolve_backend("auto", platform="cpu",
+                                    mesh=FakeMesh()).kind == "jnp"
+
+
+def test_shard_restriction_vetting():
+    from jax.sharding import PartitionSpec as P
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.zeros((2, 4))
+
+    mesh = FakeMesh()
+    leaf = jnp.zeros((4, 8, 16))
+    assert dispatch.shard_restriction(leaf, 1, P(None, "data", "model"),
+                                      mesh) is None
+    assert dispatch.shard_restriction(leaf, 1, P(), mesh) is None  # replicated
+    assert "no PartitionSpec" in dispatch.shard_restriction(leaf, 1, None, mesh)
+    assert "reused" in dispatch.shard_restriction(
+        leaf, 1, P(None, "model", "model"), mesh)
+    assert "unknown mesh axis" in dispatch.shard_restriction(
+        leaf, 1, P("pod"), mesh)
+    # granularity extent 4 does not divide the (data, model)=8-way product
+    assert "granularity" in dispatch.shard_restriction(
+        leaf, 1, P(("data", "model")), mesh)
+    assert "trailing" in dispatch.shard_restriction(
+        jnp.zeros((4, 6, 16)), 1, P(None, "model"), mesh)
+    # over-long hand-built spec: a reason, not an IndexError at trace time
+    assert "entries" in dispatch.shard_restriction(
+        jnp.zeros((4, 8)), 1, P(None, "model", "data"), mesh)
+
+
+def test_forced_pallas_fallback_warns_once():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.zeros((2, 4))
+
+    dispatch._warned_fallbacks.clear()
+    forced = dispatch.KernelBackend("pallas", True, FakeMesh(), forced=True)
+    auto = dispatch.KernelBackend("pallas", True, FakeMesh(), forced=False)
+    leaf = jnp.zeros((4, 8, 16))
+    import warnings as _w
+    with _w.catch_warnings(record=True) as rec:
+        _w.simplefilter("always")
+        assert not dispatch.fused_ok(leaf, (4,), auto, None)   # silent fallback
+        assert len(rec) == 0
+        assert not dispatch.fused_ok(leaf, (4,), forced, None)
+        assert len(rec) == 1 and "shard-mapped" in str(rec[0].message)
+        assert not dispatch.fused_ok(leaf, (4,), forced, None)  # once only
+        assert len(rec) == 1
+    dispatch._warned_fallbacks.clear()
+
+
+def test_sharded_wrappers_match_local_on_trivial_mesh():
+    """The shard_map wrappers (flag slicing, partial-norm psum, dynamic
+    lr/count) against the single-device fused path on a 1-device mesh — the
+    8-device equivalence runs in the slow lane (tests/test_distributed.py)."""
+    from jax.sharding import PartitionSpec as P
+
+    mesh = _trivial_mesh()
+    sharded = dispatch.KernelBackend("pallas", True, mesh, forced=True)
+    local = dispatch.KernelBackend("pallas", True)
+    tcfg = TrainConfig(optimizer="adamw", lr=1e-2, weight_decay=0.01)
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    shape = (4, 8, 16)
+    p, g, m, v, prev = (jax.random.normal(k, shape) for k in ks)
+    flags = jnp.array([False, True, False, True])
+    pspec = P(None, "data", "model")
+
+    n_sh, prev_sh = dispatch.fused_grades_norm(g, prev, 1, sharded, pspec)
+    n_1d, prev_1d = dispatch.fused_grades_norm(g, prev, 1, local)
+    np.testing.assert_allclose(np.asarray(n_sh), np.asarray(n_1d), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(prev_sh), np.asarray(prev_1d))
+
+    out_sh = dispatch.fused_masked_update(p, g, m, v, flags, 1e-2, 3.0, tcfg,
+                                          sharded, pspec)
+    out_1d = dispatch.fused_masked_update(p, g, m, v, flags, 1e-2, 3.0, tcfg,
+                                          local)
+    for a, b in zip(out_sh, out_1d):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    fz = np.asarray(flags)
+    np.testing.assert_array_equal(np.asarray(out_sh[0])[fz], np.asarray(p)[fz])
 
 
 def test_fused_eligibility():

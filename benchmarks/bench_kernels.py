@@ -14,6 +14,11 @@ column is the HBM roofline both paths would hit on hardware:
   layer (7 passes); fused ``masked_adamw`` pays that only for live layers —
   frozen layers cost one SMEM flag load (no-op writes under aliasing).
 
+The attention section (§3b) sweeps one fwd+bwd attention call — the flash
+kernel pair vs the blockwise-jnp schedule — over GQA on/off × 4k/32k with the
+§8 HBM-bytes roofline accounting: flash streams only the q/k/v/o slabs while
+the jnp path also round-trips the touched (S×T) score area through HBM.
+
 Results land in ``artifacts/bench/kernels.json`` and a repo-level
 ``BENCH_kernels.json`` so the perf trajectory is tracked in-tree.
 """
@@ -102,6 +107,97 @@ def _fused_step_rows(reps=5):
             "hbm_bw_model": HBM_BW,
         })
     return rows
+
+
+def _attn_hbm_bytes(B, S, T, KV, G, hd, itemsize, causal):
+    """Roofline HBM-bytes model (§8) for one attention fwd+bwd, flash kernels
+    vs the blockwise jnp schedule.
+
+    Flash (kernels/flash_attention.py) keeps every score tile in VMEM: HBM
+    traffic is the q/k/v/o slabs only — fwd reads q+k+v and writes o; bwd runs
+    the delta pass (read o, do), the dq pass (read q,k,v,do; write dq) and the
+    dk/dv pass (read q,k,v,do; write dk,dv).  The blockwise jnp path streams
+    the same slabs but ALSO round-trips each (q_chunk × kv_chunk) score block
+    through HBM (XLA materializes s/p between the einsum and softmax ops):
+    ~2 passes over the touched (S×T) score area forward, ~4 backward (autodiff
+    rematerializes s and streams dp/ds).  Causality halves the touched area.
+    """
+    q_b = B * S * KV * G * hd * itemsize
+    kv_b = B * T * KV * hd * itemsize
+    frac = 0.5 if causal else 1.0
+    score_b = B * KV * G * S * T * 4 * frac  # f32 score blocks
+    flash_fwd = 3 * q_b + 2 * kv_b            # r(q) + r(k,v) + w(o) (lse ~ 0)
+    flash_bwd = (2 * q_b                      # delta: r(o), r(do)
+                 + 3 * q_b + 2 * kv_b         # dq:    r(q,do) w(dq) + r(k,v)
+                 + 2 * q_b + 4 * kv_b)        # dk/dv: r(q,do) + r/w(k,v,dk,dv)
+    jnp_fwd = 3 * q_b + 2 * kv_b + 2 * score_b
+    jnp_bwd = 5 * q_b + 4 * kv_b + 4 * score_b
+    return flash_fwd + flash_bwd, jnp_fwd + jnp_bwd
+
+
+def _attention_rows(reps=3):
+    """Fwd+bwd attention sweep: flash (Pallas) vs blockwise-jnp, GQA on/off,
+    4k/32k.  Off-TPU the headline numbers are the HBM roofline model (the
+    transferable quantity); a small anchor shape is measured in interpret
+    mode for parity/trend only."""
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.attention import blockwise_attention
+
+    on_tpu = jax.default_backend() == "tpu"
+    itemsize = 2  # bf16 activations in the production step
+    rows = []
+    for gqa, (KV, G) in (("gqa_off", (8, 1)), ("gqa_on", (2, 4))):
+        for S in (4096, 32768):
+            B, hd = 1, 128
+            flash_b, jnp_b = _attn_hbm_bytes(B, S, S, KV, G, hd, itemsize,
+                                             causal=True)
+            row = {
+                "name": f"attention_fwd_bwd/{S // 1024}k/{gqa}",
+                "shape": {"B": B, "S": S, "KV": KV, "G": G, "hd": hd},
+                "hbm_bytes_flash": flash_b,
+                "hbm_bytes_jnp": jnp_b,
+                "hbm_reduction": round(jnp_b / flash_b, 2),
+                "modeled_flash_us": round(flash_b / HBM_BW * 1e6, 1),
+                "modeled_jnp_us": round(jnp_b / HBM_BW * 1e6, 1),
+                "hbm_bw_model": HBM_BW,
+            }
+            if on_tpu:  # real kernels at real shapes; off-TPU see the anchor
+                row.update(_measure_attn(flash_attention, blockwise_attention,
+                                         B, S, KV, G, hd, reps, interpret=False))
+            rows.append(row)
+
+    # interpret-mode anchor: small shape, same code paths, emulation-only.
+    if not on_tpu:
+        anchor = _measure_attn(flash_attention, blockwise_attention,
+                               1, 512, 2, 2, 64, reps, interpret=True)
+        rows.append({"name": "attention_fwd_bwd/anchor_512_emulation",
+                     "shape": {"B": 1, "S": 512, "KV": 2, "G": 2, "hd": 64},
+                     "measured_is_emulation": True, **anchor})
+    return rows
+
+
+def _measure_attn(flash_fn, blockwise_fn, B, S, KV, G, hd, reps, *, interpret):
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (B, S, KV, G, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.bfloat16)
+
+    def fwd_bwd(fn):
+        def loss(q, k, v):
+            return jnp.sum(fn(q, k, v).astype(jnp.float32))
+        return jax.jit(jax.grad(loss, (0, 1, 2)))
+
+    flash = fwd_bwd(lambda q, k, v: flash_fn(q, k, v, causal=True,
+                                             interpret=interpret))
+    ref = fwd_bwd(lambda q, k, v: blockwise_fn(q, k, v, causal=True,
+                                               q_chunk=min(S, 256),
+                                               kv_chunk=min(S, 256)))
+    return {
+        "measured_flash_us": round(_time(lambda *a: flash(*a), q, k, v,
+                                         reps=reps), 1),
+        "measured_jnp_us": round(_time(lambda *a: ref(*a), q, k, v,
+                                       reps=reps), 1),
+    }
 
 
 #: subprocess body for the sharded sweep: the shard-mapped fused step vs the
@@ -238,17 +334,16 @@ def run():
         "derived": "frozen layers: full RMW streamed"})
 
     from repro.kernels.flash_attention import flash_attention
-    BH, S, hd = 4, 256, 64
-    q = jax.random.normal(jax.random.PRNGKey(2), (BH, S, hd))
-    k = jax.random.normal(jax.random.PRNGKey(3), (BH, S, hd))
-    vv = jax.random.normal(jax.random.PRNGKey(4), (BH, S, hd))
+    B, S, KV, G, hd = 2, 256, 2, 1, 64
+    q = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, G, hd))
+    k = jax.random.normal(jax.random.PRNGKey(3), (B, S, KV, hd))
+    vv = jax.random.normal(jax.random.PRNGKey(4), (B, S, KV, hd))
     rows.append({
         "name": "flash_attention/pallas-interpret",
         "us_per_call": round(_time(
             lambda *a: (flash_attention(*a, block_q=128, block_k=128),), q, k, vv), 1),
         "derived": "O(bq*bk) score memory"})
-    ref_attn = jax.jit(lambda q, k, v: (ref.flash_attention_ref(
-        q[:, :, None], k[:, :, None], v[:, :, None]),))
+    ref_attn = jax.jit(lambda q, k, v: (ref.flash_attention_ref(q, k, v),))
     rows.append({
         "name": "flash_attention/jnp",
         "us_per_call": round(_time(ref_attn, q, k, vv), 1),
@@ -256,6 +351,8 @@ def run():
 
     step_rows = _fused_step_rows()
     rows.extend(step_rows)
+    attn_rows = _attention_rows()
+    rows.extend(attn_rows)
     sharded_rows = _sharded_step_rows()
     rows.extend(sharded_rows)
 
@@ -269,6 +366,14 @@ def run():
                      "model (measured_* are interpret-mode emulation, not "
                      "TPU time); on TPU they are measured"),
             "rows": step_rows,
+            "attention_note": ("fwd+bwd attention sweep, flash kernels vs "
+                               "blockwise-jnp: hbm_bytes_* are the §8 "
+                               "roofline traffic model (flash keeps score "
+                               "tiles in VMEM; jnp round-trips the touched "
+                               "(S×T) area), modeled_* divide by HBM_BW; "
+                               "off-TPU only the small anchor row is "
+                               "measured (interpret emulation)"),
+            "attention_rows": attn_rows,
             "sharded_note": ("shard-mapped fused step on a host (2 data, "
                              "4 model) mesh of 8 placeholder CPU devices; "
                              "modeled columns are the per-device HBM "

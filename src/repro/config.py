@@ -81,6 +81,13 @@ class ModelConfig:
     # "model" axis inside attention blocks when head counts don't divide the TP
     # axis (EXPERIMENTS.md §Perf iteration 1).
     seq_parallel_attn: bool = False
+    # --- attention dispatch (models/attention.py; DESIGN.md §3b) ---
+    # jnp-fallback switch from full to blockwise attention (was hard-coded at
+    # the attention() call sites).
+    attn_chunk_threshold: int = 8192
+    # attention-only backend override: "" inherits TrainConfig.kernels (so the
+    # launcher's --kernels controls attention too); else "pallas"|"jnp"|"auto".
+    attn_backend: str = ""
 
     @property
     def resolved_head_dim(self) -> int:

@@ -81,6 +81,18 @@ MULTIPOD_DECODE_RULES = ShardingRules(table={
 })
 
 
+#: Logical axes of the attention activations in the model layout
+#: (``models/attention.py``): q ``(B, S, KV, G, hd)``, k/v ``(B, T, KV, hd)``,
+#: kv-valid mask ``(B, T)``.  Attention is independent per (batch row, KV
+#: head), so these are exactly the axes the kernel dispatch layer shard_maps
+#: the flash kernels over (``kernels/dispatch.py``); ``launch/specs.py`` uses
+#: the same tuples for the serve-cell KV-cache shardings (with a leading layer
+#: axis), so the kernel always sees the layout the cache actually has.
+ATTN_Q_AXES: Tuple[Logical, ...] = ("batch", None, "kv_heads", None, None)
+ATTN_KV_AXES: Tuple[Logical, ...] = ("batch", None, "kv_heads", None)
+ATTN_MASK_AXES: Tuple[Logical, ...] = ("batch", None)
+
+
 class _Ctx(threading.local):
     mesh: Optional[Mesh] = None
     rules: ShardingRules = DEFAULT_RULES

@@ -1,5 +1,5 @@
-"""Kernel dispatch layer: route the GradES hot path to Pallas or jnp, on any
-mesh (DESIGN.md §3).
+"""Kernel dispatch layer: route the GradES hot path — and the attention hot
+path (§3b) — to Pallas or jnp, on any mesh (DESIGN.md §3).
 
 The train step's per-parameter work — the Eq.-1 monitor norm and the masked
 optimizer update — has two interchangeable implementations:
@@ -55,8 +55,12 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.distributed.sharding import active_mesh, mesh_axis_size
+from repro.distributed.sharding import (ATTN_KV_AXES, ATTN_MASK_AXES,
+                                        ATTN_Q_AXES, active_mesh,
+                                        active_rules, logical_to_spec,
+                                        mesh_axis_size)
 from repro.kernels import ops
+from repro.kernels.flash_attention import flash_attention
 
 BACKEND_CHOICES = ("pallas", "jnp", "auto")
 
@@ -321,6 +325,104 @@ def fused_masked_update(p, g, m, v, flags, lr, count, tcfg,
                      in_specs=(tsp, tsp, tsp, tsp, rep, rep, rep),
                      out_specs=(tsp, tsp, tsp),
                      check_rep=False)(p, g, m, v, flags, lr, count)
+
+
+# ---------------------------------------------------------------------------
+# Attention dispatch (DESIGN.md §3b)
+# ---------------------------------------------------------------------------
+
+#: trailing-dim ceiling for one (bq, hd)/(bk, hd) tile pair + scratch to sit
+#: comfortably in VMEM with double buffering at the default 256-row blocks.
+MAX_FLASH_HEAD_DIM = 512
+
+
+def normalize_backend(backend) -> KernelBackend:
+    """Accept a resolved :class:`KernelBackend`, a choice string, or None
+    (= ``"auto"``) — attention call sites pass whatever the config gave them."""
+    if isinstance(backend, KernelBackend):
+        return backend
+    return resolve_backend(backend or "auto")
+
+
+def flash_attention_restriction(q_shape, k_shape, dtype) -> Optional[str]:
+    """Why the flash kernel cannot take this attention call — None when it
+    can.  Per-call and shape-static, so routing never recompiles the step."""
+    if len(q_shape) != 5 or len(k_shape) != 4:
+        return (f"unexpected layout q{tuple(q_shape)} / k{tuple(k_shape)} "
+                f"(want (B,S,KV,G,hd) / (B,T,KV,hd))")
+    hd = q_shape[-1]
+    if q_shape[1] <= 1:
+        return "decode-shaped query (S=1): the dense path is cheaper"
+    if not jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        return f"non-float dtype {jnp.dtype(dtype).name}"
+    if hd > MAX_FLASH_HEAD_DIM:
+        return (f"head_dim {hd} exceeds the kernel VMEM tile budget "
+                f"({MAX_FLASH_HEAD_DIM})")
+    if hd % 8 != 0:
+        return f"head_dim {hd} not a multiple of the 8-sublane layout"
+    return None
+
+
+def _warn_forced_attention_fallback(backend: KernelBackend,
+                                    reason: str) -> None:
+    if backend.forced and reason not in _warned_fallbacks:
+        _warned_fallbacks.add(reason)
+        warnings.warn(
+            f"kernels='pallas' forced, but this attention call cannot take "
+            f"the flash kernel ({reason}); falling back to the jnp "
+            f"full/blockwise path for such calls.",
+            RuntimeWarning, stacklevel=3)
+
+
+def flash_ok(q, k, backend: KernelBackend) -> bool:
+    """Dispatch predicate for one attention call; warns once per reason when
+    pallas was forced but the call falls back to the blockwise jnp path."""
+    if not backend.use_pallas:
+        return False
+    reason = flash_attention_restriction(q.shape, k.shape, q.dtype)
+    if reason is not None:
+        _warn_forced_attention_fallback(backend, reason)
+        return False
+    return True
+
+
+def fused_flash_attention(q, k, v, *, causal: bool, window: int = 0,
+                          kv_valid=None, backend: KernelBackend,
+                          block_q: int = 256, block_k: int = 256):
+    """The flash fwd+bwd pair, shard_map-wrapped under a multi-device mesh.
+
+    Attention is independent per (batch row, KV head), so the kernel runs
+    unchanged on each shard of the ``(batch -> data, kv_heads -> model)``
+    activation layout (``ATTN_*_AXES``); axes that don't divide are dropped by
+    the same ``logical_to_spec`` resolution the launcher uses, degrading to
+    replicated compute rather than wrong results.  Sequence-sharded layouts
+    (``seq_parallel_attn``) never reach this path — the model layer keeps the
+    jnp formulation there, since a shard would need its neighbours' KV.
+    """
+    kw = dict(causal=causal, window=window, block_q=block_q, block_k=block_k,
+              interpret=backend.interpret)
+    if not backend.sharded:
+        return flash_attention(q, k, v, kv_valid=kv_valid, **kw)
+    mesh = backend.mesh
+    rules = active_rules()
+    qspec = logical_to_spec(ATTN_Q_AXES, shape=q.shape, mesh=mesh, rules=rules)
+    kvspec = logical_to_spec(ATTN_KV_AXES, shape=k.shape, mesh=mesh,
+                             rules=rules)
+    if kv_valid is None:  # keep the no-mask fast path (no dead-row pass)
+        def local(q_l, k_l, v_l):
+            return flash_attention(q_l, k_l, v_l, **kw)
+
+        return shard_map(local, mesh=mesh, in_specs=(qspec, kvspec, kvspec),
+                         out_specs=qspec, check_rep=False)(q, k, v)
+    mspec = logical_to_spec(ATTN_MASK_AXES, shape=kv_valid.shape, mesh=mesh,
+                            rules=rules)
+
+    def local(q_l, k_l, v_l, m_l):
+        return flash_attention(q_l, k_l, v_l, kv_valid=m_l, **kw)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(qspec, kvspec, kvspec, mspec),
+                     out_specs=qspec, check_rep=False)(q, k, v, kv_valid)
 
 
 def moments_fusable(m, v, p, optimizer: str) -> bool:

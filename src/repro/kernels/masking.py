@@ -1,0 +1,74 @@
+"""Shared attention-masking constants.
+
+One value for "masked-out score" everywhere: the Pallas flash kernels
+(``kernels/flash_attention.py``), the pure-JAX reference paths
+(``models/attention.py``), and the test oracles (``kernels/ref.py``) must
+agree bit-for-bit on masking semantics, or fused-vs-reference parity tests
+compare different math.
+
+``NEG_INF`` is a large *finite* negative (not ``-inf``) on purpose: online
+softmax computes ``exp(s - m)`` with ``m`` possibly equal to the mask value,
+and the backward pass computes ``exp(s - lse)`` where both can sit at the
+mask floor — finite values keep those differences well-defined (``-inf - -inf``
+would be NaN).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+#: Additive mask value for disallowed attention scores (finite, see above).
+NEG_INF = -1e30
+
+
+def band_live(row0, n_rows: int, col0, n_cols: int, *, causal: bool,
+              window: int):
+    """Whether an (n_rows × n_cols) score tile whose first row/column sit at
+    sequence positions (row0, col0) intersects the causal/window band.
+
+    The ONE definition of the band, shared by the Pallas kernels' ``pl.when``
+    tile skipping and the blockwise fallback's ``lax.cond`` — so fused and
+    reference paths can never disagree about which tiles contribute.  Returns
+    Python ``True`` when unmasked; ``row0``/``col0`` may be traced.
+    """
+    conds = []
+    if causal:  # tile holds some col <= its last row
+        conds.append(col0 <= row0 + n_rows - 1)
+    if window:  # tile holds some col inside the window of its first row
+        conds.append(col0 + n_cols - 1 > row0 - window)
+    if not conds:
+        return True
+    return functools.reduce(jnp.logical_and, conds)
+
+
+def rows_alive(kv_valid, S: int, *, causal: bool, window: int, offset=0):
+    """(B, S) bool — query rows with at least one valid key visible under the
+    causal/window structure; None when ``kv_valid`` is None (all alive).
+
+    A fully-masked row has no defined softmax: the dense path would return a
+    uniform average over all T columns, the online-softmax paths a uniform
+    average over whichever tiles they visited — different garbage per backend.
+    Every attention path therefore zeroes such rows (output and, through the
+    ``where``, gradients), so fused-vs-reference parity holds even for fully
+    padded batch entries — the exact case ``kv_valid`` exists for.
+    """
+    if kv_valid is None:
+        return None
+    T = kv_valid.shape[-1]
+    c = jnp.cumsum(kv_valid.astype(jnp.int32), axis=-1)     # inclusive prefix
+    s_pos = offset + jnp.arange(S)
+    hi = jnp.minimum(s_pos, T - 1) if causal else jnp.full((S,), T - 1)
+    lo = jnp.maximum(s_pos - window + 1, 0) if window else jnp.zeros(
+        (S,), jnp.int32)
+    count = c[..., hi] - jnp.where(lo > 0, c[..., jnp.maximum(lo - 1, 0)], 0)
+    return count > 0
+
+
+def zero_dead_rows(out, alive):
+    """Zero attention outputs of fully-masked rows (see :func:`rows_alive`);
+    ``out`` is (B, S, KV, G, hd), ``alive`` (B, S) or None."""
+    if alive is None:
+        return out
+    return jnp.where(alive[:, :, None, None, None], out,
+                     jnp.zeros((), out.dtype))

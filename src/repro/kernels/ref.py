@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.masking import NEG_INF, rows_alive, zero_dead_rows
+
 
 def grades_norm_ref(g, prev):
     """(L,M,N) -> (norm (L,), new_prev)."""
@@ -27,13 +29,28 @@ def masked_adamw_ref(p, g, m, v, frozen, *, lr, b1, b2, eps, weight_decay, count
     return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
 
 
-def flash_attention_ref(q, k, v, *, causal=True):
-    """q: (B,S,H,hd), k/v: (B,T,H,hd) (MHA layout used by the kernel)."""
-    scale = q.shape[-1] ** -0.5
-    s = jnp.einsum("bshd,bthd->bhst", q, k, preferred_element_type=jnp.float32) * scale
+def flash_attention_ref(q, k, v, *, causal=True, window=0, kv_valid=None):
+    """GQA-layout oracle for the flash kernel: q (B,S,KV,G,hd), k/v
+    (B,T,KV,hd) -> (B,S,KV,G,hd).  Deliberately an independent dense
+    implementation (no online softmax, no shared code with the kernel) so
+    parity tests have real ground truth; masking uses the shared ``NEG_INF``
+    so fused-vs-reference comparisons see identical semantics."""
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    scale = hd ** -0.5
+    s = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
     if causal:
-        S, T = q.shape[1], k.shape[1]
-        mask = jnp.tril(jnp.ones((S, T), bool), T - S)
-        s = jnp.where(mask, s, -1e30)
+        ok &= k_pos <= q_pos
+    if window:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, NEG_INF)
+    if kv_valid is not None:
+        s = jnp.where(kv_valid[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhst,bthd->bshd", p.astype(v.dtype), v)
+    out = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v)
+    return zero_dead_rows(out, rows_alive(kv_valid, S, causal=causal,
+                                          window=window))

@@ -16,8 +16,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.config import GradESConfig, ModelConfig, ShapeCell, TrainConfig
 from repro.core.grades import _flatten_with_paths, build_monitor_spec
 from repro.data.pipeline import batch_specs
-from repro.distributed.sharding import (ShardingRules, logical_to_spec,
-                                        model_axis_size)
+from repro.distributed.sharding import (ATTN_KV_AXES, ShardingRules,
+                                        logical_to_spec, model_axis_size)
 from repro.launch.mesh import rules_for
 from repro.models import model
 from repro.train.state import init_train_state
@@ -137,14 +137,14 @@ def _cache_axes(cfg: ModelConfig, cache_sds) -> Any:
                                     h=(None, "batch", None),
                                     m=(None, "batch", None))
         return {"m": m_ax, "s": s_ax, "pos": ()}
-    axes: Dict[str, Any] = {
-        "k": (None, "batch", None, "kv_heads", None),
-        "v": (None, "batch", None, "kv_heads", None),
-        "pos": (),
-    }
+    # Per-layer KV caches shard exactly like the attention activations the
+    # flash kernels are shard_mapped over (kernels/dispatch.py) — the shared
+    # ATTN_KV_AXES plus the leading stacked-layer axis.
+    kv_ax = (None,) + ATTN_KV_AXES
+    axes: Dict[str, Any] = {"k": kv_ax, "v": kv_ax, "pos": ()}
     if cfg.family == "encdec":
-        axes["ck"] = (None, "batch", None, "kv_heads", None)
-        axes["cv"] = (None, "batch", None, "kv_heads", None)
+        axes["ck"] = kv_ax
+        axes["cv"] = kv_ax
     if cfg.ssm is not None:
         axes["ssm_h"] = (None, "batch", "ssm_inner", None)
         axes["ssm_conv"] = (None, "batch", None, "ssm_inner")

@@ -48,12 +48,19 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--mesh", choices=["none", "single", "multi"], default="none")
     ap.add_argument("--kernels", default="auto", choices=["auto", "pallas", "jnp"],
-                    help="GradES hot-path backend; auto = fused Pallas on TPU "
-                         "(shard-mapped over the mesh), jnp elsewhere")
+                    help="hot-path backend for the fused GradES kernels AND "
+                         "flash attention; auto = Pallas on TPU (shard-mapped "
+                         "over the mesh), jnp elsewhere")
+    ap.add_argument("--attn-chunk-threshold", type=int, default=0,
+                    help="override ModelConfig.attn_chunk_threshold (seq len "
+                         "where the jnp fallback switches full -> blockwise)")
     ap.add_argument("--log", default="")
     args = ap.parse_args()
 
     cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
+    if args.attn_chunk_threshold:
+        cfg = dataclasses.replace(cfg,
+                                  attn_chunk_threshold=args.attn_chunk_threshold)
     seq, batch = args.seq, args.batch
     if args.shape:
         cell = SHAPES[args.shape]

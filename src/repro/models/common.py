@@ -12,6 +12,21 @@ def cast(x, dtype: str):
     return x.astype(jnp.dtype(dtype))
 
 
+def attn_call_args(cfg, attn_args=None):
+    """Keyword args for ``models.attention.attention`` from the model config,
+    merged with per-call overrides (the train step threads its resolved
+    :class:`~repro.kernels.dispatch.KernelBackend` through ``attn_args`` so
+    ``--kernels`` controls the attention backend too).  This is the ONE place
+    the precedence lives: a non-empty ``cfg.attn_backend`` beats whatever the
+    caller threaded — every call site (train, eval, serve) goes through here.
+    """
+    args = {"chunk_threshold": cfg.attn_chunk_threshold,
+            "backend": None, **(attn_args or {})}
+    if cfg.attn_backend:
+        args["backend"] = cfg.attn_backend
+    return args
+
+
 def rms_norm(x, scale, eps: float):
     dtype = x.dtype
     x32 = x.astype(jnp.float32)

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.distributed.sharding import logical_constraint
 from repro.models import attention as attn_lib
-from repro.models.common import apply_rope, init_dense, rms_norm, shard_batch
+from repro.models.common import (apply_rope, attn_call_args, init_dense,
+                                 rms_norm, shard_batch)
 from repro.models.mlp import gelu_mlp
 from repro.models.transformer import _qkv
 
@@ -91,16 +92,17 @@ def _cast(lp, dtype):
                         if jnp.issubdtype(a.dtype, jnp.floating) else a, lp)
 
 
-def encode(params, cfg: ModelConfig, frames):
+def encode(params, cfg: ModelConfig, frames, attn_args=None):
     """frames: (B, F, D) stub embeddings -> encoder states (B, F, D)."""
     x = shard_batch(frames.astype(cfg.dtype))
     positions = jnp.arange(x.shape[1])[None, :]
+    aargs = attn_call_args(cfg, attn_args)
 
     def body(x, lp):
         lp = _cast(lp, cfg.dtype)
         h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
         q, k, v = _qkv(h, lp, cfg, positions)
-        o = attn_lib.attention(q, k, v, causal=False)
+        o = attn_lib.attention(q, k, v, causal=False, **aargs)
         x = x + o.reshape(x.shape[:2] + (cfg.q_dim,)) @ lp["wo"]
         h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
         x = x + gelu_mlp(h, lp["w_up"], lp["w_down"])
@@ -111,10 +113,12 @@ def encode(params, cfg: ModelConfig, frames):
 
 
 def _decoder_stack(params, cfg: ModelConfig, x, enc_out, positions, *,
-                   collect_cache: bool, self_cache=None, slot=None, length=None):
+                   collect_cache: bool, self_cache=None, slot=None, length=None,
+                   attn_args=None):
     """Shared by training forward, prefill, and decode (cache args set => decode)."""
     B, S = x.shape[:2]
     KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    aargs = attn_call_args(cfg, attn_args)
     decode = self_cache is not None
     xs: Dict[str, Any] = {"lp": params["layers"]}
     if decode:
@@ -133,7 +137,7 @@ def _decoder_stack(params, cfg: ModelConfig, x, enc_out, positions, *,
             ck, cv = layer_in["ck"], layer_in["cv"]
             ys.update({"k": kc, "v": vc, "ck": ck, "cv": cv})
         else:
-            o = attn_lib.attention(q, k, v, causal=True)
+            o = attn_lib.attention(q, k, v, causal=True, **aargs)
             if collect_cache:
                 ys.update({"k": k, "v": v})
         x = x + o.reshape(B, S, cfg.q_dim) @ lp["wo"]
@@ -147,7 +151,7 @@ def _decoder_stack(params, cfg: ModelConfig, x, enc_out, positions, *,
             cv_ = (enc_out @ lp["cv"]).reshape(B, -1, KV, hd)
             if collect_cache:
                 ys.update({"ck": ck_, "cv": cv_})
-        o = attn_lib.attention(cq, ck_, cv_, causal=False)
+        o = attn_lib.attention(cq, ck_, cv_, causal=False, **aargs)
         x = x + o.reshape(B, S, cfg.q_dim) @ lp["co"]
         h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
         x = shard_batch(x + gelu_mlp(h, lp["w_up"], lp["w_down"]))
@@ -160,12 +164,13 @@ def _decoder_stack(params, cfg: ModelConfig, x, enc_out, positions, *,
     return logits, ys
 
 
-def forward(params, cfg: ModelConfig, tokens, frames, *, remat: str = "none"):
-    enc_out = encode(params, cfg, frames)
+def forward(params, cfg: ModelConfig, tokens, frames, *, remat: str = "none",
+            attn_args=None):
+    enc_out = encode(params, cfg, frames, attn_args)
     x = shard_batch(params["embed"].astype(cfg.dtype)[tokens])
     positions = jnp.arange(tokens.shape[1])[None, :]
     logits, _ = _decoder_stack(params, cfg, x, enc_out, positions,
-                               collect_cache=False)
+                               collect_cache=False, attn_args=attn_args)
     return logits, jnp.float32(0)
 
 

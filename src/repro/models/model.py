@@ -34,17 +34,20 @@ def param_logical_axes(cfg: ModelConfig, model_size=None):
     return _mod(cfg).param_logical_axes(cfg, model_size)
 
 
-def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *, remat: str = "none"):
+def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *, remat: str = "none",
+            attn_args=None):
     if cfg.family == "encdec":
         logits, aux = encdec.forward(params, cfg, batch["tokens"], batch["frames"],
-                                     remat=remat)
+                                     remat=remat, attn_args=attn_args)
     else:
-        logits, aux = _mod(cfg).forward(params, cfg, batch["tokens"], remat=remat)
+        logits, aux = _mod(cfg).forward(params, cfg, batch["tokens"], remat=remat,
+                                        attn_args=attn_args)
     return logits, aux
 
 
-def loss_fn(params, batch: Dict[str, Any], cfg: ModelConfig, *, remat: str = "none"):
-    logits, aux = forward(params, cfg, batch, remat=remat)
+def loss_fn(params, batch: Dict[str, Any], cfg: ModelConfig, *, remat: str = "none",
+            attn_args=None):
+    logits, aux = forward(params, cfg, batch, remat=remat, attn_args=attn_args)
     ce = cross_entropy(logits, batch["labels"])
     loss = ce + aux
     return loss, {"loss": loss, "ce": ce, "aux_loss": aux}

@@ -18,7 +18,8 @@ from repro.distributed.sharding import logical_constraint
 from repro.models import attention as attn_lib
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
-from repro.models.common import apply_rope, cross_entropy, init_dense, rms_norm, shard_batch
+from repro.models.common import (apply_rope, attn_call_args, cross_entropy,
+                                 init_dense, rms_norm, shard_batch)
 
 
 # ---------------------------------------------------------------------------
@@ -166,7 +167,13 @@ def attn_block(x, lp, cfg: ModelConfig, positions, *, attn_args: Dict[str, Any])
     q, k, v = _qkv(h, lp, cfg, positions)
     if sp:
         q = logical_constraint(q, ("batch", "attn_seq", None, None, None))
-    o = attn_lib.attention(q, k, v, causal=True, window=cfg.swa_window, **attn_args)
+    args = attn_call_args(cfg, attn_args)
+    if sp:
+        # sequence-sharded activations can't be shard_mapped per (batch, KV
+        # head) — a shard would need its neighbours' KV.  Keep the jnp
+        # formulation; GSPMD partitions it via the constraints above.
+        args["backend"] = "jnp"
+    o = attn_lib.attention(q, k, v, causal=True, window=cfg.swa_window, **args)
     if sp:
         o = logical_constraint(o, ("batch", "attn_seq", None, None, None))
     o = o.reshape(B, S, cfg.q_dim) @ lp["wo"]

@@ -60,7 +60,8 @@ def _zero_states(cfg: ModelConfig, batch: int):
 
 
 def forward(params, cfg: ModelConfig, tokens, *, remat: str = "none",
-            collect_cache: bool = False):
+            collect_cache: bool = False, attn_args=None):
+    del attn_args  # attention-free family; accepted for dispatcher uniformity
     B, S = tokens.shape
     x = shard_batch(params["embed"].astype(cfg.dtype)[tokens])
     z = _zero_states(cfg, B)

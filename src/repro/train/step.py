@@ -28,11 +28,14 @@ from repro.models import model
 from repro.optim.optimizer import apply_updates, global_norm, lr_at
 
 
-def _loss(params, base_params, batch, cfg: ModelConfig, tcfg: TrainConfig):
+def _loss(params, base_params, batch, cfg: ModelConfig, tcfg: TrainConfig,
+          attn_args=None):
     if tcfg.lora is not None:
         merged = merge_lora(base_params, params, tcfg.lora)
-        return model.loss_fn(merged, batch, cfg, remat=tcfg.remat)
-    return model.loss_fn(params, batch, cfg, remat=tcfg.remat)
+        return model.loss_fn(merged, batch, cfg, remat=tcfg.remat,
+                             attn_args=attn_args)
+    return model.loss_fn(params, batch, cfg, remat=tcfg.remat,
+                         attn_args=attn_args)
 
 
 def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
@@ -68,10 +71,15 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
             _derived["specs"] = param_partition_specs(params, axes, mesh, rules)
         return _derived["specs"]
 
+    # attention rides the same resolved backend as the GradES kernels, so
+    # --kernels controls the whole hot path; a non-empty cfg.attn_backend
+    # overrides inside models.common.attn_call_args (DESIGN.md §3b).
+    attn_args = {"backend": backend}
+
     def grads_of(params, base_params, batch):
         def f(p):
             p = static_freeze_tree(p, spec, static_frozen)
-            return _loss(p, base_params, batch, cfg, tcfg)
+            return _loss(p, base_params, batch, cfg, tcfg, attn_args)
         (loss, metrics), grads = jax.value_and_grad(f, has_aux=True)(params)
         return loss, metrics, grads
 
@@ -124,7 +132,9 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
 
 
 def make_eval_step(cfg: ModelConfig, tcfg: TrainConfig):
+    attn_args = {"backend": resolve_backend(tcfg.kernels)}
+
     def eval_step(params, base_params, batch):
-        loss, metrics = _loss(params, base_params, batch, cfg, tcfg)
+        loss, metrics = _loss(params, base_params, batch, cfg, tcfg, attn_args)
         return metrics["ce"]
     return eval_step

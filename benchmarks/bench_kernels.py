@@ -200,6 +200,83 @@ def _measure_attn(flash_fn, blockwise_fn, B, S, KV, G, hd, reps, *, interpret):
     }
 
 
+def _loop_overhead_rows():
+    """Host-loop overhead sweep (DESIGN.md §4): steady-state per-step wall
+    time for ``sync_interval ∈ {1, 8, 32}`` × prefetch on/off on a tiny dense
+    model whose per-step compute is small enough that the per-step Python
+    dispatch + device_get round-trip is visible.  The device floor is the
+    compiled 32-step block timed back-to-back on pre-staged device blocks (no
+    controller, no metric drain) — ``host_overhead_us_per_step`` is the
+    steady-state p50 minus that floor, and must shrink as the host wakes only
+    once per K steps."""
+    import dataclasses
+
+    from repro.config import GradESConfig, ModelConfig, TrainConfig
+    from repro.core.grades import build_monitor_spec
+    from repro.data.pipeline import make_batches, stack_batches
+    from repro.train.loop import Trainer
+    from repro.train.state import init_train_state
+    from repro.train.step import make_multi_step
+
+    cfg = ModelConfig(name="bench-tiny", family="dense", n_layers=2,
+                      d_model=32, n_heads=2, n_kv_heads=2, d_ff=64, vocab=64)
+    steps = 320  # 10 blocks at K=32 -> a stable p50 window
+    base = TrainConfig(
+        seq_len=8, global_batch=4, steps=steps, lr=1e-3,
+        # tau=0 keeps every step's compute identical across the sweep (no
+        # freezing, no Tier-1 sync) — differences are pure host overhead.
+        grades=GradESConfig(enabled=True, tau=0.0, alpha=0.5, normalize=True,
+                            static_repartition=False))
+
+    # --- device floor: compiled 32-step scan, pre-staged blocks, hot ---
+    # Per-block times with the min estimator (the block's pure execution,
+    # free of scheduler noise); measured after a warmup so every steady_us
+    # row sits above it.
+    state = init_train_state(jax.random.PRNGKey(0), cfg, base)
+    spec = build_monitor_spec(state.params)
+    multi = jax.jit(make_multi_step(cfg, base, spec), donate_argnums=0)
+    blocks = [jax.device_put(stack_batches(
+        list(make_batches(cfg, base, steps=32, start_step=i * 32))))
+        for i in range(9)]
+    state, m = multi(state, blocks[0])
+    jax.block_until_ready(m)  # compile
+    state, m = multi(state, blocks[1])
+    jax.block_until_ready(m)  # warm
+    per_block = []
+    for b in blocks[2:]:
+        t0 = time.perf_counter()
+        state, m = multi(state, b)
+        jax.block_until_ready((state, m))
+        per_block.append(time.perf_counter() - t0)
+    floor_us = min(per_block) / 32 * 1e6
+
+    rows = []
+    for K in (1, 8, 32):
+        for depth in (2, 0):
+            tcfg = dataclasses.replace(base, sync_interval=K,
+                                       prefetch_depth=depth)
+            t0 = time.perf_counter()
+            res = Trainer(cfg, tcfg, log_every=steps).train()
+            wall_us = (time.perf_counter() - t0) / steps * 1e6
+            # steady-state per-step p50 from the watchdog window (block
+            # completion deltas; excludes the compile-polluted first block)
+            p50_us = res.history[-1]["dt_p50"] * 1e6
+            rows.append({
+                "name": f"loop_overhead/sync_{K}/"
+                        f"prefetch_{'on' if depth else 'off'}",
+                "sync_interval": K,
+                "prefetch": bool(depth),
+                "steps": steps,
+                "steps_per_sec": round(1e6 / p50_us, 1),
+                "wall_us_per_step": round(wall_us, 1),
+                "steady_us_per_step": round(p50_us, 1),
+                "device_floor_us_per_step": round(floor_us, 1),
+                "host_overhead_us_per_step": round(max(p50_us - floor_us,
+                                                       0.0), 1),
+            })
+    return rows
+
+
 #: subprocess body for the sharded sweep: the shard-mapped fused step vs the
 #: jnp reference on a host (2 data, 4 model) mesh of 8 placeholder CPU
 #: devices (the main bench process keeps its single-device view).
@@ -355,6 +432,8 @@ def run():
     rows.extend(attn_rows)
     sharded_rows = _sharded_step_rows()
     rows.extend(sharded_rows)
+    loop_rows = _loop_overhead_rows()
+    rows.extend(loop_rows)
 
     with open(out_path("kernels.json"), "w") as f:
         json.dump(rows, f, indent=1)
@@ -379,6 +458,14 @@ def run():
                              "modeled columns are the per-device HBM "
                              "roofline, measured are emulation"),
             "sharded_rows": sharded_rows,
+            "loop_note": ("sync-boundary trainer sweep (DESIGN.md §4): "
+                          "steady-state per-step time (watchdog p50 of block "
+                          "completion deltas, compile excluded) for "
+                          "sync_interval 1/8/32 × prefetch on/off on a tiny "
+                          "model; host_overhead_us_per_step subtracts the "
+                          "compiled-block device floor and shrinks as the "
+                          "host wakes once per K steps"),
+            "loop_rows": loop_rows,
         }, f, indent=1)
     return rows
 

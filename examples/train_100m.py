@@ -65,7 +65,10 @@ def main():
     )
     trainer = Trainer(cfg, tcfg, log_every=10,
                       log_path=os.path.join(ckpt, "metrics.jsonl"))
-    res = trainer.train(batches=ds.batches(p["batch"]))
+    # Callable form: the trainer calls it with the resumed step index, so a
+    # restart continues the shuffled stream instead of replaying batch 0.
+    res = trainer.train(
+        batches=lambda start: ds.batches(p["batch"], start_step=start))
     print(f"\nstop={res.stop_reason} steps_run={res.steps_run} "
           f"wall={res.wall_time:.1f}s recompiles={res.recompiles}")
     if res.history:

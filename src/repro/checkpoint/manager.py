@@ -10,6 +10,12 @@
   re-placed with ``jax.device_put`` against the *current* mesh's shardings, so a
   restart on a different data-axis size just works.
 * GradES state rides inside TrainState, so freeze decisions survive failures.
+* **Block-granular steps**: the sync-boundary trainer (DESIGN.md §4) saves at
+  block boundaries, so step labels are boundary step counts — a resume always
+  lands on a boundary and the step-indexed data stream continues without
+  replaying batches.  A revisited boundary (relaunch with a different
+  ``sync_interval``) atomically overwrites the old directory, so the newest
+  state for a step always wins.
 """
 from __future__ import annotations
 

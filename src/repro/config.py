@@ -207,6 +207,22 @@ class TrainConfig:
     # mapped over the active mesh when it has >1 device — and jnp elsewhere
     # (DESIGN.md §3).
     kernels: str = "auto"                # "pallas" | "jnp" | "auto"
+    # --- sync-boundary trainer (DESIGN.md §4) ---
+    # The host only wakes at block boundaries: the compiled step is lax.scan'd
+    # over a stacked (sync_interval, ...) batch block with per-step metrics
+    # kept on device, so per-step Python dispatch / device_get round-trips are
+    # paid once per block.  1 reproduces per-step host behavior bit-exactly.
+    # Tier-1 repartition checks run at boundaries aligned to
+    # round_up(repartition_interval, sync_interval); two runs with different
+    # sync_interval are bit-identical iff they resolve to the same aligned
+    # interval — pick repartition_interval as a common multiple of the K
+    # values being compared (e.g. 16 for K ∈ {1, 8, 16}).
+    sync_interval: int = 1
+    # Batch blocks ahead of the device that the background prefetch thread
+    # keeps staged (sampled, stacked, device_put against the active mesh's
+    # batch shardings).  0 disables the thread: blocks are built synchronously
+    # on the training thread (debug / deterministic-ordering mode).
+    prefetch_depth: int = 2
     # early stopping baselines
     grades: GradESConfig = field(default_factory=GradESConfig)
     lora: Optional[LoRAConfig] = None

@@ -2,5 +2,7 @@ from repro.data.pipeline import (  # noqa: F401
     SyntheticTask,
     make_batches,
     batch_specs,
+    stack_batches,
+    Prefetcher,
     PackedFileDataset,
 )

@@ -1,4 +1,5 @@
-"""Data pipeline: deterministic synthetic LM task + packed-file loader.
+"""Data pipeline: deterministic synthetic LM task + packed-file loader +
+the sync-boundary block prefetcher (DESIGN.md §4).
 
 The synthetic task is a *learnable* noisy-permutation language: token t+1 is
 ``perm[token_t]`` with probability (1-noise), else uniform.  A small model drives
@@ -6,12 +7,24 @@ its CE toward the noise entropy in a few hundred steps, which is exactly what th
 GradES reproduction benchmarks need (visible convergence → visible per-matrix
 freezing).  Generation is pure numpy off the training thread; batches are sharded
 per host (each process materializes only its slice — the multi-host contract).
+
+Batch randomness is keyed by the **absolute step index** (``default_rng((seed,
+step))``), not by position in a sequential stream: batch ``i`` is the same
+whether the run started at step 0 or resumed from a checkpoint at step ``i`` —
+a resumed run never replays earlier batches (the old sequential-stream bug).
+
+:class:`Prefetcher` runs sampling/stacking/``jax.device_put`` on a background
+thread so the training thread only dequeues device-resident ``(K, B, ...)``
+blocks: while the device crunches block *n*, the host stages block *n+1*
+(double-buffered up to ``TrainConfig.prefetch_depth`` blocks in flight).
 """
 from __future__ import annotations
 
 import os
+import queue
+import threading
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Callable, Dict, Iterator, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -42,13 +55,24 @@ class SyntheticTask:
         return {"tokens": toks[:, :-1], "labels": toks[:, 1:].astype(np.int32)}
 
 
+def _step_rng(seed: int, seed_offset: int, step: int) -> np.random.Generator:
+    """Per-step generator keyed by the absolute step index — resume-safe."""
+    return np.random.default_rng((seed + 1 + seed_offset, step))
+
+
 def make_batches(cfg: ModelConfig, tcfg: TrainConfig, *, steps: Optional[int] = None,
-                 seed_offset: int = 0, noise: float = 0.1
+                 seed_offset: int = 0, noise: float = 0.1, start_step: int = 0
                  ) -> Iterator[Dict[str, np.ndarray]]:
+    """Yield the batches for absolute steps ``start_step, start_step+1, ...``.
+
+    ``steps`` bounds the count (default: ``tcfg.steps - start_step``).  Batch
+    ``i`` depends only on ``(tcfg.seed, seed_offset, i)``, so a resumed run
+    continues the stream instead of replaying it from batch 0.
+    """
     task = SyntheticTask(cfg.vocab, tcfg.seq_len, noise=noise, seed=tcfg.seed)
-    rng = np.random.default_rng(tcfg.seed + 1 + seed_offset)
-    n = steps if steps is not None else tcfg.steps
-    for _ in range(n):
+    n = steps if steps is not None else max(tcfg.steps - start_step, 0)
+    for step in range(start_step, start_step + n):
+        rng = _step_rng(tcfg.seed, seed_offset, step)
         batch = task.sample(rng, tcfg.global_batch)
         if cfg.family == "encdec":
             batch["frames"] = rng.standard_normal(
@@ -66,6 +90,129 @@ def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, jax.ShapeDt
         specs["frames"] = jax.ShapeDtypeStruct((batch, cfg.n_frames, cfg.d_model),
                                                jnp.bfloat16)
     return specs
+
+
+def stack_batches(batches: Sequence[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray]:
+    """Stack K per-step batches into one ``(K, B, ...)`` block (host-side)."""
+    assert batches, "cannot stack an empty block"
+    return {k: np.stack([np.asarray(b[k]) for b in batches])
+            for k in batches[0]}
+
+
+class Prefetcher:
+    """Background-thread batch-block pipeline (DESIGN.md §4).
+
+    Pulls per-step batches from ``source``, groups them into blocks of the
+    sizes given by ``sizes`` (the controller's block schedule: ``K, K, ...,
+    tail``), stacks each block to ``(size, B, ...)`` and places it on device
+    via ``place`` (default ``jax.device_put``; the trainer passes a mesh-aware
+    placer built from the launch batch shardings).  Up to ``depth`` placed
+    blocks are kept in flight, so the ``device_put`` of block *n+1* overlaps
+    the device executing block *n*.
+
+    ``depth <= 0`` degrades to fully synchronous block building on the calling
+    thread (same results, no thread) — the deterministic-ordering debug mode.
+    Iteration ends when ``sizes`` is exhausted or ``source`` runs dry; a
+    source that dies mid-block yields the short remainder (every produced
+    batch gets trained).  Worker exceptions re-raise on the consuming thread
+    at the next ``next()``.
+    """
+
+    def __init__(self, source: Iterator[Dict[str, np.ndarray]],
+                 sizes: Sequence[int], *, depth: int = 2,
+                 place: Optional[Callable] = None):
+        self._source = iter(source)
+        self._sizes = list(sizes)
+        self._place = place or jax.device_put
+        self._sync = depth <= 0
+        self._exhausted = False
+        if self._sync:
+            self._pos = 0
+            return
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="repro-prefetch")
+        self._thread.start()
+
+    def _build(self, size: int):
+        block: List[Dict[str, np.ndarray]] = []
+        for _ in range(size):
+            if not self._sync and self._stop.is_set():
+                return None  # close() mid-build: stop consuming the source
+            try:
+                block.append(next(self._source))
+            except StopIteration:
+                break
+        if not block:
+            return None
+        # A short final block (source ran dry mid-block) is yielded as-is —
+        # every batch the source produced gets trained.
+        return self._place(stack_batches(block))
+
+    def _worker(self):
+        try:
+            for size in self._sizes:
+                if self._stop.is_set():
+                    return
+                block = self._build(size)
+                if block is None:
+                    break
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(block, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as e:  # surfaced on the consumer thread
+            self._err = e
+        finally:
+            while not self._stop.is_set():
+                try:
+                    self._q.put(None, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._exhausted:
+            raise StopIteration
+        if self._sync:
+            if self._pos >= len(self._sizes):
+                self._exhausted = True
+                raise StopIteration
+            block = self._build(self._sizes[self._pos])
+            if block is None:
+                self._exhausted = True
+                raise StopIteration
+            self._pos += 1
+            return block
+        item = self._q.get()
+        if item is None:
+            self._exhausted = True
+            self.close()
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self):
+        """Stop the worker and release queue slots (idempotent); further
+        ``next()`` calls raise StopIteration instead of blocking."""
+        if self._sync:
+            return
+        self._exhausted = True
+        self._stop.set()
+        while True:  # drain so a blocked put observes the stop flag
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
 
 
 class PackedFileDataset:
@@ -86,13 +233,21 @@ class PackedFileDataset:
     def write(path: str, tokens: np.ndarray):
         np.save(path, np.asarray(tokens, np.int32))
 
-    def batches(self, batch: int, *, seed: int = 0,
-                epochs: int = 1_000_000) -> Iterator[Dict[str, np.ndarray]]:
-        rng = np.random.default_rng(seed)
-        for _ in range(epochs):
-            order = rng.permutation(self.rows)
-            for i in range(0, len(order) - batch + 1, batch):
+    def batches(self, batch: int, *, seed: int = 0, epochs: int = 1_000_000,
+                start_step: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+        """Shuffled batches; the per-epoch permutation is keyed by ``(seed,
+        epoch)`` so ``start_step`` (an absolute batch index) seeks in O(1) —
+        a resumed run continues the stream instead of replaying batch 0."""
+        per_epoch = max((len(self.rows) - batch) // batch + 1, 0) \
+            if len(self.rows) >= batch else 0
+        if per_epoch == 0:
+            return
+        first_epoch, offset = divmod(start_step, per_epoch)
+        for epoch in range(first_epoch, epochs):
+            order = np.random.default_rng((seed, epoch)).permutation(self.rows)
+            for i in range(offset * batch, len(order) - batch + 1, batch):
                 rows = np.sort(order[i:i + batch])
                 chunk = self.arr[rows]
                 yield {"tokens": chunk[:, :-1].astype(np.int32),
                        "labels": chunk[:, 1:].astype(np.int32)}
+            offset = 0

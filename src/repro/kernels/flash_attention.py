@@ -40,17 +40,17 @@ from repro.kernels.masking import (NEG_INF, band_live, rows_alive,
                                    zero_dead_rows)
 
 
-def _round_up(n: int, m: int) -> int:
+def round_up(n: int, m: int) -> int:
     return -(-n // m) * m
 
 
 def _tile_geometry(S: int, T: int, block_q: int, block_k: int):
     """(bq, Sp, bk, Tp): block sizes and padded extents.  Sp % bq == 0 so row
     blocks never straddle a query-group boundary in the (G·Sp) row layout."""
-    bq = min(block_q, _round_up(S, 8))
-    Sp = _round_up(S, bq)
-    bk = min(block_k, _round_up(T, 128 if T >= 128 else 8))
-    Tp = _round_up(T, bk)
+    bq = min(block_q, round_up(S, 8))
+    Sp = round_up(S, bq)
+    bk = min(block_k, round_up(T, 128 if T >= 128 else 8))
+    Tp = round_up(T, bk)
     return bq, Sp, bk, Tp
 
 

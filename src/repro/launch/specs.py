@@ -122,6 +122,23 @@ def train_cell_specs(cfg: ModelConfig, tcfg: TrainConfig, mesh, rules=None):
             state_sh, b_sh)
 
 
+def batch_block_shardings(cfg: ModelConfig, tcfg: TrainConfig, mesh,
+                          rules=None) -> Dict[str, NamedSharding]:
+    """Shardings for one stacked ``(K, B, ...)`` batch block (DESIGN.md §4).
+
+    The per-batch ``batch → data`` mapping of :func:`train_cell_specs` with a
+    leading replicated block axis; the spec is K-invariant (only the batch
+    dim's divisibility is checked), so the trainer's prefetcher resolves it
+    once and reuses it for every block including the short tail.
+    """
+    rules = rules or rules_for(mesh)
+    b_sds = batch_specs(cfg, tcfg.global_batch, tcfg.seq_len)
+    return {k: NamedSharding(mesh, logical_to_spec(
+        (None, "batch") + (None,) * (len(v.shape) - 1),
+        shape=(1,) + tuple(v.shape), mesh=mesh, rules=rules))
+        for k, v in b_sds.items()}
+
+
 # ---------------------------------------------------------------------------
 # Serve cells (prefill / decode)
 # ---------------------------------------------------------------------------

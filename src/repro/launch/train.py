@@ -51,6 +51,12 @@ def main():
                     help="hot-path backend for the fused GradES kernels AND "
                          "flash attention; auto = Pallas on TPU (shard-mapped "
                          "over the mesh), jnp elsewhere")
+    ap.add_argument("--sync-interval", type=int, default=8,
+                    help="host sync boundary: steps per compiled lax.scan "
+                         "block (1 = per-step host loop; DESIGN.md §4)")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="batch blocks staged ahead by the background "
+                         "prefetch thread (0 = synchronous, no thread)")
     ap.add_argument("--attn-chunk-threshold", type=int, default=0,
                     help="override ModelConfig.attn_chunk_threshold (seq len "
                          "where the jnp fallback switches full -> blockwise)")
@@ -68,6 +74,7 @@ def main():
     tcfg = TrainConfig(
         seq_len=seq, global_batch=batch, steps=args.steps, lr=args.lr,
         optimizer=args.optimizer, remat=args.remat, kernels=args.kernels,
+        sync_interval=args.sync_interval, prefetch_depth=args.prefetch_depth,
         lora=LoRAConfig(rank=args.lora_rank) if args.lora_rank else None,
         val_es=args.val_es,
         checkpoint_dir=args.ckpt, checkpoint_every=args.ckpt_every,

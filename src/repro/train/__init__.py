@@ -1,3 +1,4 @@
 from repro.train.state import TrainState, init_train_state  # noqa: F401
-from repro.train.step import make_train_step, make_eval_step  # noqa: F401
+from repro.train.step import (make_train_step, make_eval_step,  # noqa: F401
+                              make_multi_step)
 from repro.train.loop import Trainer  # noqa: F401

@@ -1,25 +1,54 @@
-"""Host-side training loop: the three GradES tiers + fault tolerance glue.
+"""Host-side training controller: sync boundaries + the three GradES tiers.
+
+The host only wakes at **sync boundaries** — every ``tcfg.sync_interval`` (K)
+steps (DESIGN.md §4).  The compiled step is ``lax.scan``'d over a stacked
+``(K, ...)`` batch block (``train/step.py::make_multi_step``); batch blocks are
+sampled, stacked and ``jax.device_put`` on a background thread
+(``data/pipeline.py::Prefetcher``), and per-step metrics come back in one bulk
+``device_get`` per block, drained one block *behind* the dispatch so host-side
+bookkeeping overlaps device execution:
 
 * Tier 0 (in-jit freeze masks) lives in the compiled step.
-* Tier 1: every ``repartition_interval`` steps the host reads the (tiny) frozen
-  masks; newly fully-frozen matrix *types* trigger a re-jit with stop_gradient
-  applied to them — backward FLOPs genuinely shrink (bounded recompiles ≤ #types).
-* Tier 2: when every monitored matrix is frozen, training terminates (Algorithm 1
-  line 24).
-* Classic validation early stopping (the paper's FP+ES / LoRA+ES baselines) is
-  reproduced structurally: validation forward passes every ``val_interval_frac``
-  of training with patience — its cost shows up as wall-clock, exactly the
-  overhead Table 4 reports.
-* Fault tolerance: periodic async checkpoints, auto-resume from the newest valid
-  step, straggler watchdog (EMA step-time; logs anomalies).
+* Tier 1: at boundaries aligned to ``round_up(repartition_interval, K)`` the
+  host reads the (tiny) frozen masks; newly fully-frozen matrix *types*
+  trigger a re-jit with stop_gradient applied to them — backward FLOPs
+  genuinely shrink (bounded recompiles ≤ #types).  Runs with different
+  ``sync_interval`` are bit-identical when they resolve to the same aligned
+  interval (``repartition_interval`` a common multiple of the K values
+  compared): the re-jit then lands on the same global step either way.  With
+  a misaligned interval the re-jit shifts to the next K-boundary — still
+  correct, but the stop_gradient changes the global-norm clip denominator,
+  so the runs are no longer bit-comparable.
+* Tier 2: when every monitored matrix is frozen, training terminates
+  (Algorithm 1 line 24).  Detection needs no mid-block readback — the scan
+  body itself no-ops every step past the all-frozen point, so the block the
+  host is lagging behind on is a pure pass-through and the final state is
+  bit-identical to a per-step run.
+* Classic validation early stopping (the paper's FP+ES / LoRA+ES baselines)
+  runs at the boundary that crosses each ``val_interval`` multiple (several
+  multiples inside one block share the boundary's eval, each accruing
+  patience) — its cost shows up as wall-clock, exactly the overhead Table 4
+  reports.
+* Fault tolerance: periodic async checkpoints land on block boundaries (so a
+  resume lands on a boundary and the step-indexed data stream continues
+  without replaying batches), auto-resume from the newest valid step, and a
+  straggler watchdog.  The watchdog is block-granular: per-step times are
+  derived from block *completion-event* timestamps (the lagged metric drain
+  blocks until the device finishes the block, so consecutive completion
+  deltas track device time whenever the device is the bottleneck; the clock
+  restarts after boundary work so eval/checkpoint/recompile time never counts
+  as block compute), the EMA is seeded only after the first block (compile
+  time never pollutes it), and p50/p95 per-step times over a sliding window
+  of blocks ride in the logged rows.
 """
 from __future__ import annotations
 
+import collections
 import json
 import os
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterator, List, Optional
+from typing import Any, Callable, Dict, Iterator, List, Optional, Union
 
 import jax
 import numpy as np
@@ -28,10 +57,13 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.config import ModelConfig, TrainConfig
 from repro.core.grades import build_monitor_spec
 from repro.core.partition import fully_frozen_types
-from repro.data.pipeline import make_batches
+from repro.data.pipeline import Prefetcher, make_batches
+from repro.distributed.sharding import active_mesh, active_rules
 from repro.kernels.dispatch import resolve_backend
-from repro.train.state import TrainState, init_train_state
-from repro.train.step import make_eval_step, make_train_step
+from repro.kernels.flash_attention import round_up
+from repro.train.state import (TrainState, init_train_state,
+                               steps_completed)
+from repro.train.step import make_eval_step, make_multi_step
 
 
 @dataclass
@@ -42,6 +74,33 @@ class TrainResult:
     history: List[Dict[str, float]] = field(default_factory=list)
     stop_reason: str = "budget"
     recompiles: int = 0
+
+
+def block_schedule(start_step: int, total_steps: int, k: int) -> List[int]:
+    """Block sizes covering steps ``[start_step, total_steps)``: first align
+    onto the K-grid (a resume from a foreign-interval checkpoint), then full
+    K-blocks, then the tail — every boundary lands on ``min(m·K, total)``."""
+    sizes: List[int] = []
+    s = start_step
+    if s % k and s < total_steps:
+        sizes.append(min(k - s % k, total_steps - s))
+        s += sizes[-1]
+    while total_steps - s >= k:
+        sizes.append(k)
+        s += k
+    if total_steps - s > 0:
+        sizes.append(total_steps - s)
+    return sizes
+
+
+@dataclass
+class _Inflight:
+    """One dispatched-but-undrained block."""
+
+    start: int              # global step count before the block
+    size: int
+    metrics: Any            # device dict of (size,) metric arrays
+    dispatched_at: float
 
 
 class Trainer:
@@ -69,8 +128,23 @@ class Trainer:
             return state
         return self.ckpt.restore(latest, state)
 
+    def _block_placer(self) -> Optional[Callable]:
+        """Mesh-aware placer for stacked blocks (batch dim → data axis, same
+        resolution as the launcher's batch shardings in ``launch/specs.py``)."""
+        mesh = active_mesh()
+        if mesh is None or mesh.devices.size <= 1:
+            return None  # Prefetcher defaults to plain jax.device_put
+        from repro.launch.specs import batch_block_shardings
+        sh = batch_block_shardings(self.cfg, self.tcfg, mesh, active_rules())
+
+        def place(block):
+            return {k: jax.device_put(np.asarray(v), sh.get(k))
+                    for k, v in block.items()}
+        return place
+
     # ----------------------------------------------------------------- train
-    def train(self, batches: Optional[Iterator[Dict[str, np.ndarray]]] = None,
+    def train(self, batches: Union[Iterator[Dict[str, np.ndarray]],
+                                   Callable[[int], Iterator], None] = None,
               val_batches: Optional[List[Dict[str, np.ndarray]]] = None,
               state: Optional[TrainState] = None) -> TrainResult:
         cfg, tcfg = self.cfg, self.tcfg
@@ -80,81 +154,216 @@ class Trainer:
         # Kernel backend is resolved once per run (static across Tier-1
         # re-jits); per-group fused-vs-jnp selection happens inside the step.
         backend = resolve_backend(tcfg.kernels)
-        step_fn = jax.jit(
-            make_train_step(cfg, tcfg, spec, static_frozen, backend=backend),
-            donate_argnums=0)
-        eval_fn = jax.jit(make_eval_step(cfg, tcfg)) if val_batches else None
-        if batches is None:
-            batches = make_batches(cfg, tcfg)
 
+        def compile_step(frozen_set):
+            return jax.jit(
+                make_multi_step(cfg, tcfg, spec, frozen_set, backend=backend),
+                donate_argnums=0)
+
+        step_fn = compile_step(static_frozen)
+        eval_fn = jax.jit(make_eval_step(cfg, tcfg)) if val_batches else None
+
+        start_step = steps_completed(state)
+        K = max(int(tcfg.sync_interval), 1)
+        sizes = block_schedule(start_step, tcfg.steps, K)
+        aligned_repart = round_up(max(self.repartition_interval, 1), K)
         val_interval = max(int(tcfg.val_interval_frac * tcfg.steps), 1)
+        tier2_on = tcfg.grades.enabled and bool(spec.groups)
+
+        # Data: default stream is keyed by absolute step index (resume-safe);
+        # a callable lets external datasets seek too; a bare iterator is used
+        # as-is (the caller owns its resume offset).
+        if batches is None:
+            src: Iterator = make_batches(cfg, tcfg, start_step=start_step)
+        elif callable(batches):
+            src = batches(start_step)
+        else:
+            src = batches
+        blocks = Prefetcher(src, sizes, depth=tcfg.prefetch_depth,
+                            place=self._block_placer())
+
         best_val, val_bad = float("inf"), 0
         history: List[Dict[str, float]] = []
+        last_row: Optional[Dict[str, float]] = None
         recompiles = 0
-        ema_dt: Optional[float] = None
-        t0 = time.perf_counter()
-        start_step = int(state.step)
         stop = "budget"
+        # --- watchdog state (block-granular; see module docstring) ---
+        ema_dt: Optional[float] = None
+        last_done: Optional[float] = None
+        blocks_drained = 0
+        compile_pending = False  # next drained block pays a (re)trace/compile
+        dispatched_sizes: set = set()  # block shapes already traced/compiled
+        dt_window: collections.deque = collections.deque(maxlen=64)
 
-        for i, batch in enumerate(batches):
-            step = start_step + i
-            if step >= tcfg.steps:
-                break
-            ts = time.perf_counter()
-            state, metrics = step_fn(state, batch)
-            metrics = {k: float(v) for k, v in jax.device_get(metrics).items()}
-            dt = time.perf_counter() - ts
-            # straggler watchdog (EMA of step time; flags >3x outliers)
-            if ema_dt is None:
-                ema_dt = dt
-            elif dt > 3.0 * ema_dt and i > 3:
-                metrics["straggler"] = dt / ema_dt
-            ema_dt = 0.9 * (ema_dt or dt) + 0.1 * dt
-            metrics["step"] = step
-            metrics["dt"] = dt
-            if step % self.log_every == 0 or metrics.get("all_frozen"):
-                history.append(metrics)
-                self._log(metrics)
+        def drain(inflight: _Inflight) -> bool:
+            """Bulk device_get of one block's stacked metrics; returns True if
+            Tier-2 (all monitored matrices frozen) was observed."""
+            nonlocal ema_dt, last_done, blocks_drained, last_row, compile_pending
+            m = jax.device_get(inflight.metrics)
+            t_done = time.perf_counter()
+            block_dt = t_done - (last_done if last_done is not None
+                                 else inflight.dispatched_at)
+            last_done = t_done
+            executed = np.asarray(m.get("executed",
+                                        np.ones(inflight.size)), np.float64)
+            n_exec = int(executed.sum())
+            per_step = block_dt / max(n_exec, 1)
+            # A block that was already finished when its predecessor drained
+            # yields a near-zero completion delta (the host, not the device,
+            # was the laggard — e.g. a long dispatch on a synchronous
+            # backend).  Such artifacts would poison the EMA; detect them
+            # against the dispatch→completion span and report that span as
+            # the per-step estimate instead.
+            dispatch_span = ((t_done - inflight.dispatched_at)
+                             / max(n_exec, 1))
+            artifact = per_step < 0.1 * dispatch_span
+            if artifact:
+                per_step = dispatch_span
+            straggler = 0.0
+            # Compile-polluted blocks (block 0, the first block after a Tier-1
+            # re-jit, the first block of a new size — the tail or a
+            # resume-alignment block retraces the scan) and host-lagged
+            # artifacts are excluded from the EMA / p50-p95 window entirely.
+            clean = blocks_drained >= 1 and not compile_pending and not artifact
+            compile_pending = False
+            if clean:
+                if ema_dt is None:
+                    ema_dt = per_step
+                elif per_step > 3.0 * ema_dt and blocks_drained >= 2:
+                    straggler = per_step / ema_dt
+                ema_dt = 0.9 * ema_dt + 0.1 * per_step
+                dt_window.append(per_step)
+            blocks_drained += 1
+            p50 = float(np.percentile(dt_window, 50)) if dt_window else per_step
+            p95 = float(np.percentile(dt_window, 95)) if dt_window else per_step
+            tier2 = False
+            for j in range(inflight.size):
+                if executed[j] < 1.0:
+                    continue  # post-termination no-op rows carry no step
+                row = {k: float(v[j]) for k, v in m.items() if k != "executed"}
+                row["step"] = inflight.start + j
+                row["dt"] = per_step
+                row["dt_p50"] = p50
+                row["dt_p95"] = p95
+                if straggler:
+                    row["straggler"] = straggler
+                last_row = row
+                if row["step"] % self.log_every == 0 or row.get("all_frozen"):
+                    history.append(row)
+                    self._log(row)
+            if tier2_on and float(np.max(np.asarray(m["all_frozen"],
+                                                    np.float64))) >= 1.0:
+                tier2 = True
+            return tier2
 
-            # Tier 2: all matrices frozen -> terminate
-            if metrics.get("all_frozen", 0) >= 1.0 and tcfg.grades.enabled:
-                stop = "all_frozen"
-                break
-
-            # Tier 1: bucketed static repartition
-            if (tcfg.grades.enabled and tcfg.grades.static_repartition
-                    and (i + 1) % self.repartition_interval == 0):
-                now_frozen = fully_frozen_types(
-                    jax.device_get(state.grades.frozen))
-                if now_frozen - static_frozen:
-                    static_frozen = frozenset(now_frozen)
-                    step_fn = jax.jit(
-                        make_train_step(cfg, tcfg, spec, static_frozen,
-                                        backend=backend),
-                        donate_argnums=0)
-                    recompiles += 1
-
-            # classic validation early stopping baseline
-            if tcfg.val_es and eval_fn is not None and (i + 1) % val_interval == 0:
-                vl = float(np.mean([
-                    float(eval_fn(state.params, state.base_params, vb))
-                    for vb in val_batches]))
-                if vl < best_val - tcfg.val_delta:
-                    best_val, val_bad = vl, 0
-                else:
-                    val_bad += 1
-                if val_bad >= tcfg.val_patience:
-                    stop = "val_es"
+        t0 = time.perf_counter()
+        pending: Optional[_Inflight] = None
+        s = start_step   # global steps covered by dispatched blocks
+        try:
+            for size in sizes:
+                try:
+                    block = next(blocks)
+                except StopIteration:
                     break
+                # An externally-supplied iterator can run dry mid-block; the
+                # prefetcher then yields the short remainder — train it and
+                # stop afterwards (the old per-step loop trained every batch).
+                bsize = int(jax.tree.leaves(block)[0].shape[0])
+                exhausted = bsize < size
+                tier2 = False
+                if bsize not in dispatched_sizes:
+                    # New block shape => the dispatch below pays a fresh scan
+                    # trace/compile.  Settle the pending block first so its
+                    # completion delta stays clean, and mark the compiled
+                    # block itself for exclusion from the timing stats.
+                    if pending is not None:
+                        tier2 = drain(pending)
+                        pending = None
+                        last_done = time.perf_counter()
+                        if tier2:
+                            stop = "all_frozen"
+                            break
+                    dispatched_sizes.add(bsize)
+                    compile_pending = True
+                t_dispatch = time.perf_counter()
+                state, metrics = step_fn(state, block)
+                cur = _Inflight(start=s, size=bsize, metrics=metrics,
+                                dispatched_at=t_dispatch)
+                prev_s, s = s, s + bsize
+                # Drain the *previous* block while this one runs on device.
+                tier2 = (pending is not None and drain(pending)) or tier2
+                pending = cur
+                need_t1 = (tcfg.grades.enabled and tcfg.grades.static_repartition
+                           and s % aligned_repart == 0 and s < tcfg.steps)
+                val_crossings = (s // val_interval - prev_s // val_interval
+                                 if tcfg.val_es and eval_fn is not None else 0)
+                need_val = val_crossings > 0
+                need_ckpt = (self.ckpt is not None and tcfg.checkpoint_every
+                             and s // tcfg.checkpoint_every
+                             > prev_s // tcfg.checkpoint_every)
+                if tier2 or need_t1 or need_val or need_ckpt:
+                    # Sync boundary: settle the just-dispatched block too.
+                    tier2 = drain(pending) or tier2
+                    pending = None
+                    if tier2:
+                        stop = "all_frozen"
+                        break
+                    if need_t1:
+                        now_frozen = fully_frozen_types(
+                            jax.device_get(state.grades.frozen))
+                        if now_frozen - static_frozen:
+                            static_frozen = frozenset(now_frozen)
+                            step_fn = compile_step(static_frozen)
+                            recompiles += 1
+                            compile_pending = True  # paid at the next dispatch
+                    if need_val:
+                        # One eval per boundary; a non-improving result
+                        # accrues one patience count per val_interval multiple
+                        # the block crossed (the K=1 plateau cadence), while
+                        # an improving result counts as a single improvement —
+                        # mid-block states were never materialized, so they
+                        # cannot be evaluated separately.  Patience state
+                        # (best_val/val_bad) is in-memory only: a resumed
+                        # val-ES run restarts it.
+                        vl = float(np.mean([
+                            float(eval_fn(state.params, state.base_params, vb))
+                            for vb in val_batches]))
+                        if vl < best_val - tcfg.val_delta:
+                            best_val, val_bad = vl, 0
+                        else:
+                            val_bad += val_crossings
+                        if val_bad >= tcfg.val_patience:
+                            stop = "val_es"
+                            break
+                    if need_ckpt:
+                        self.ckpt.save(s, state)
+                    # Boundary work (eval forward passes, the checkpoint's
+                    # device_get, a Tier-1 recompile) is host/aux time, not
+                    # block compute: restart the completion-delta clock so the
+                    # next block's per-step estimate excludes it (no false
+                    # straggler flags).
+                    last_done = time.perf_counter()
+                if exhausted:
+                    break
+            if pending is not None:
+                if drain(pending) and tier2_on:
+                    stop = "all_frozen"
+                pending = None
+        finally:
+            blocks.close()
 
-            if (self.ckpt is not None and tcfg.checkpoint_every
-                    and (step + 1) % tcfg.checkpoint_every == 0):
-                self.ckpt.save(step + 1, state)
+        # Always record the terminal step (budget end mid-log-interval, or a
+        # val-ES/Tier-2 break whose last step missed the log cadence).
+        if last_row is not None and (not history
+                                     or history[-1]["step"] != last_row["step"]):
+            history.append(last_row)
+            self._log(last_row)
 
         if self.ckpt is not None:
             self.ckpt.wait()
         wall = time.perf_counter() - t0
-        return TrainResult(state=state, steps_run=int(state.step) - start_step,
+        return TrainResult(state=state,
+                           steps_run=steps_completed(state) - start_step,
                            wall_time=wall, history=history, stop_reason=stop,
                            recompiles=recompiles)
 

@@ -1,7 +1,14 @@
 """TrainState: everything that must survive a checkpoint/restart, as one pytree.
 
 GradES state is part of it by construction — freeze decisions survive node failures
-and elastic restarts (DESIGN.md §4)."""
+and elastic restarts (DESIGN.md §4).
+
+``state.step`` counts *executed* optimizer steps and is authoritative for
+resume: under the sync-boundary trainer the host dispatches whole blocks, but
+Tier-2-gated no-op steps inside a block do not advance it, and checkpoints are
+written at block boundaries, so a restored ``step`` always lands on a boundary
+and the step-indexed data stream (``data/pipeline.py``) continues exactly
+where the failed run stopped."""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -59,3 +66,9 @@ def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig,
 
 def monitor_spec_for(state: TrainState, tcfg: TrainConfig) -> MonitorSpec:
     return build_monitor_spec(state.params, lora=tcfg.lora is not None)
+
+
+def steps_completed(state: TrainState) -> int:
+    """Host-side executed-step count (one tiny scalar pull).  The controller
+    reads this once at resume and once at the end of a run — never per step."""
+    return int(jax.device_get(state.step))

@@ -1,4 +1,4 @@
-"""train_step / eval_step factories.
+"""train_step / eval_step / multi_step factories.
 
 ``make_train_step(cfg, tcfg, spec, static_frozen=...)`` closes over everything
 static and returns a pure ``(state, batch) -> (state, metrics)`` suitable for
@@ -6,6 +6,14 @@ static and returns a pure ``(state, batch) -> (state, metrics)`` suitable for
 
 One step = microbatched grads (lax.scan accumulation) → optional int8-EF
 compression → GradES monitor update (Algorithm 1) → masked optimizer update.
+
+``make_multi_step`` is the sync-boundary variant (DESIGN.md §4): it
+``lax.scan``s the single step over a stacked ``(K, ...)`` batch block so the
+host only wakes once per K steps — per-step metrics come back stacked as
+``(K,)`` arrays in one bulk transfer, and Tier-2 is handled *inside* the scan
+(once every monitored matrix is frozen, remaining steps are ``lax.cond``
+no-ops), so a block dispatched past the all-frozen point leaves the state
+bit-identical to a per-step run that stopped exactly there.
 """
 from __future__ import annotations
 
@@ -129,6 +137,52 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
         return new_state, metrics
 
     return train_step
+
+
+def make_multi_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
+                    static_frozen: AbstractSet[str] = frozenset(),
+                    backend: Optional[KernelBackend] = None,
+                    param_specs=None):
+    """Sync-boundary step: ``(state, block) -> (state, metrics)`` where
+    ``block`` is a stacked ``(K, B, ...)`` batch pytree and every metric comes
+    back as a ``(K,)`` array (one bulk ``device_get`` per block, DESIGN.md §4).
+
+    The scan body wraps the single step in a Tier-2 gate: when all monitored
+    matrices are already frozen at the start of a step, the step is a
+    ``lax.cond`` no-op (state — including ``state.step`` and ``opt.count`` —
+    passes through unchanged; the metrics row reports ``executed=0``,
+    ``all_frozen=1``).  The host therefore never needs a mid-block readback to
+    stop at exactly the right step: blocks dispatched past termination are
+    pure pass-throughs and the final state is bit-identical to
+    ``sync_interval=1``.  The same factory serves K=1, so both paths run the
+    identical scan-body HLO.
+    """
+    single = make_train_step(cfg, tcfg, spec, static_frozen, backend=backend,
+                             param_specs=param_specs)
+    tier2 = tcfg.grades.enabled and bool(spec.groups)
+
+    def multi_step(state, block):
+        def run(state, batch):
+            new_state, m = single(state, batch)
+            return new_state, dict(m, executed=jnp.float32(1))
+
+        def body(state, batch):
+            if not tier2:
+                return run(state, batch)
+
+            def skip(s):
+                m_sds = jax.eval_shape(single, s, batch)[1]
+                m = {k: jnp.zeros(v.shape, v.dtype) for k, v in m_sds.items()}
+                m["frozen_frac"] = jnp.ones_like(m["frozen_frac"])
+                m["all_frozen"] = jnp.ones_like(m["all_frozen"])
+                return s, dict(m, executed=jnp.float32(0))
+
+            return jax.lax.cond(all_frozen(state.grades.frozen),
+                                skip, lambda s: run(s, batch), state)
+
+        return jax.lax.scan(body, state, block)
+
+    return multi_step
 
 
 def make_eval_step(cfg: ModelConfig, tcfg: TrainConfig):

@@ -9,10 +9,18 @@ measured column is interpret-mode emulation (flagged as such); the modeled
 column is the HBM roofline both paths would hit on hardware:
 
 * jnp monitor: ~4 passes over the gradient bytes (sub, abs-reduce, prev copy);
-  fused ``grades_norm``: 2 reads + 1 write regardless of freeze state.
+  fused ``grades_norm``: 2 reads + 1 write for live layers — frozen layers
+  cost one flag load (the freeze gate; prev write-back elided under aliasing).
 * jnp update: XLA's ``where`` streams p/g/m/v and rewrites p/m/v for every
   layer (7 passes); fused ``masked_adamw`` pays that only for live layers —
   frozen layers cost one SMEM flag load (no-op writes under aliasing).
+
+The segmented-step section sweeps the Tier-1.5 segment plan (DESIGN.md §2):
+one full jitted train step of a reduced config, monolithic scan vs the
+chain-of-segment-scans plan, at per-layer frozen fractions
+{0, 0.25, 0.5, 0.75} × ``segment_max`` ∈ {1, 4, 8} — modeled dW FLOPs from the
+§8 roofline term next to measured step time (the dW elimination is
+backend-independent: it is real XLA compute dropped even on CPU).
 
 The attention section (§3b) sweeps one fwd+bwd attention call — the flash
 kernel pair vs the blockwise-jnp schedule — over GQA on/off × 4k/32k with the
@@ -66,7 +74,7 @@ def _fused_step_rows(reps=5):
 
     @jax.jit
     def fused_step(p, g, m, v, prev, flags, lr, count):
-        norm, new_prev = ops.grades_norm(g, prev, interpret=not on_tpu)
+        norm, new_prev = ops.grades_norm(g, prev, flags, interpret=not on_tpu)
         pn, mn, vn = ops.masked_adamw(p, g, m, v, flags, lr, count,
                                       interpret=not on_tpu, **kw)
         return pn, mn, vn, norm, new_prev
@@ -85,9 +93,10 @@ def _fused_step_rows(reps=5):
         args = (p, g, m, v, prev, flags, 1e-3, 5.0)
         fused_us = _time(lambda *a: fused_step(*a), *args, reps=reps)
         jnp_us = _time(lambda *a: jnp_step(*a), *args, reps=reps)
-        # HBM roofline: monitor (all layers) + update (live layers only for
-        # the fused kernel; every layer for the jnp where-update).
-        fused_bytes = bytes_leaf * (3 + 7 * (1.0 - frac))
+        # HBM roofline: both the freeze-gated monitor (3 passes) and the
+        # masked update (7 passes) stream live layers only — frozen layers
+        # cost the (L,) int32 flag loads; the jnp paths stream every layer.
+        fused_bytes = bytes_leaf * (3 + 7) * (1.0 - frac) + 2 * L * 4
         jnp_bytes = bytes_leaf * (4 + 7)
         fused_model = fused_bytes / HBM_BW * 1e6
         jnp_model = jnp_bytes / HBM_BW * 1e6
@@ -198,6 +207,66 @@ def _measure_attn(flash_fn, blockwise_fn, B, S, KV, G, hd, reps, *, interpret):
         "measured_jnp_us": round(_time(lambda *a: ref(*a), q, k, v,
                                        reps=reps), 1),
     }
+
+
+def _segment_rows(reps=3):
+    """Tier-1.5 sweep: a full jitted train step, monolithic layer scan vs the
+    segment plan, at per-layer frozen fractions {0, .25, .5, .75} ×
+    ``segment_max`` ∈ {1, 4, 8}.  ``segment_max=1`` IS the monolithic scan
+    (single segment, whole-type-only signature), so its row doubles as the
+    baseline.  The modeled column is the §8 dW term; the measured step time
+    is real XLA compute on any backend (stop_gradient drops the dW einsums at
+    trace time, not in a TPU-only pass)."""
+    import dataclasses as _dc
+
+    import numpy as np
+
+    import repro.configs as configs
+    from repro.config import GradESConfig, TrainConfig
+    from repro.core.grades import build_monitor_spec
+    from repro.core.partition import plan_skipped_params, segment_plan
+    from repro.data.pipeline import make_batches
+    from repro.train.state import init_train_state
+    from repro.train.step import make_train_step
+
+    cfg = _dc.replace(configs.reduced("qwen3-0.6b"), n_layers=8)
+    tcfg = TrainConfig(seq_len=64, global_batch=4, steps=100, lr=1e-3,
+                       grades=GradESConfig(enabled=True, tau=0.0, alpha=0.5,
+                                           normalize=True))
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    spec = build_monitor_spec(state.params)
+    batch = next(iter(make_batches(cfg, tcfg, steps=1)))
+    tokens = tcfg.global_batch * tcfg.seq_len
+    L = cfg.n_layers
+    pool = sum(int(np.prod(state.params["layers"][k].shape))
+               for k in state.params["layers"] if not k.endswith("norm"))
+
+    rows = []
+    for frac in (0.0, 0.25, 0.5, 0.75):
+        n_frozen = int(frac * L)
+        frozen_host = {n: np.arange(L) < n_frozen for n in spec.groups}
+        for seg_max in (1, 4, 8):
+            plan = segment_plan(frozen_host, spec, L, seg_max)
+            step = jax.jit(make_train_step(cfg, tcfg, spec, plan=plan))
+            skipped = plan_skipped_params(plan, state.params["layers"], L)
+
+            def run_step(s, b):
+                new_s, m = step(s, b)
+                return (m["loss"],)  # keep donation-free: state reused
+
+            us = _time(lambda *a: run_step(*a), state, batch, reps=reps)
+            rows.append({
+                "name": f"segmented_step/frozen_{frac}/segmax_{seg_max}",
+                "frozen_frac": frac,
+                "segment_max": seg_max,
+                "segments": [[lo, hi, sorted(sig)]
+                             for lo, hi, sig in plan.segments],
+                "dw_skip_params": int(skipped),
+                "modeled_dw_flops": 2.0 * (pool - skipped) * tokens,
+                "modeled_dw_skip_frac": round(skipped / pool, 4),
+                "measured_step_us": round(us, 1),
+            })
+    return rows
 
 
 def _loop_overhead_rows():
@@ -432,6 +501,8 @@ def run():
     rows.extend(attn_rows)
     sharded_rows = _sharded_step_rows()
     rows.extend(sharded_rows)
+    segment_rows = _segment_rows()
+    rows.extend(segment_rows)
     loop_rows = _loop_overhead_rows()
     rows.extend(loop_rows)
 
@@ -458,6 +529,14 @@ def run():
                              "modeled columns are the per-device HBM "
                              "roofline, measured are emulation"),
             "sharded_rows": sharded_rows,
+            "segment_note": ("Tier-1.5 segmented layer scan (DESIGN.md §2): "
+                             "full train step at per-layer frozen fractions "
+                             "× segment_max; segment_max=1 is the monolithic "
+                             "baseline; modeled_dw_flops is the §8 roofline "
+                             "dW term and measured_step_us is real XLA "
+                             "compute (dW einsums dropped at trace time on "
+                             "any backend)"),
+            "segment_rows": segment_rows,
             "loop_note": ("sync-boundary trainer sweep (DESIGN.md §4): "
                           "steady-state per-step time (watchdog p50 of block "
                           "completion deltas, compile excluded) for "

@@ -1,4 +1,8 @@
-"""Aggregates artifacts/dryrun/*.json into the EXPERIMENTS.md roofline tables."""
+"""Aggregates artifacts/dryrun/*.json into the EXPERIMENTS.md roofline tables,
+plus the per-layer frozen-fraction dW curve (DESIGN.md §8): modeled train-step
+FLOPs vs the fraction of monitored matrices the Tier-1.5 segment plan skips —
+the curve ``bench_kernels.py``'s segmented-step sweep checks measured times
+against."""
 from __future__ import annotations
 
 import glob
@@ -38,6 +42,35 @@ def markdown_table(rows, mesh="single"):
     return "\n".join(out)
 
 
+def dw_curve_rows():
+    """Modeled dW-elimination curve per assigned arch at the train cell —
+    only for families whose layer scan consumes a segment plan (encdec/xlstm
+    keep whole-type Tier 1; reporting a per-layer curve for them would claim
+    an unrealizable speedup)."""
+    import repro.configs as configs
+    from repro.config import SHAPES
+    from repro.launch import roofline as rf
+    from repro.models.model import supports_segment_plan
+
+    out = []
+    for arch in configs.ASSIGNED:
+        try:
+            cfg = configs.get(arch)
+        except KeyError:
+            print(f"grades_dw_curve: unknown arch {arch!r}, skipped")
+            continue
+        if not supports_segment_plan(cfg):
+            continue
+        cell = SHAPES["train_4k"]
+        curve = rf.grades_dw_curve(cfg, cell)
+        out.append({"arch": arch,
+                    "monitored_params": cfg.monitored_param_count(),
+                    "total_active_params": cfg.active_param_count(),
+                    "curve": curve,
+                    "max_flop_speedup": round(curve[-1]["flop_speedup"], 4)})
+    return out
+
+
 def run():
     rows = load()
     ok = [r for r in rows if r.get("status") == "ok"]
@@ -46,10 +79,22 @@ def run():
         f.write(table + "\n")
     with open(out_path("roofline_multi.md"), "w") as f:
         f.write(markdown_table(rows, "multi") + "\n")
+    dw = dw_curve_rows()
+    with open(out_path("grades_dw_curve.json"), "w") as f:
+        json.dump({"note": ("modeled train-step FLOPs vs per-layer frozen "
+                            "fraction of the monitored matrices (Tier-1.5 "
+                            "segment plan, DESIGN.md §8); measured step-time "
+                            "counterpart lives in BENCH_kernels.json "
+                            "segment_rows"),
+                   "rows": dw}, f, indent=1)
     summary = [{"name": f"dryrun/{r['arch']}/{r['shape']}/{r['mesh']}",
                 "us_per_call": round(r["step_time_s"] * 1e6, 1),
                 "derived": f"bottleneck={r['bottleneck']} "
                            f"frac={r['roofline_frac']:.2e}"} for r in ok]
+    summary.extend({"name": f"grades_dw_curve/{r['arch']}",
+                    "us_per_call": 0.0,
+                    "derived": f"all-frozen FLOP speedup "
+                               f"×{r['max_flop_speedup']}"} for r in dw)
     return summary
 
 

@@ -10,6 +10,15 @@
   re-placed with ``jax.device_put`` against the *current* mesh's shardings, so a
   restart on a different data-axis size just works.
 * GradES state rides inside TrainState, so freeze decisions survive failures.
+* **Tier-1.5 moment layouts**: the trainer saves optimizer moments in the
+  *plan-independent* layout — row-packed buffers are expanded back to full
+  before the save (``train/loop.py::_checkpoint_state``; whole-type
+  placeholders stay, they depend only on the masks) — and ``restore`` loads
+  whatever shapes the manifest records, template shapes notwithstanding.
+  After restore the trainer re-packs per its *own* plan
+  (``optim.optimizer.align_moments``), so a checkpoint restores correctly
+  across plan/``segment_max`` changes, GradES being toggled, and elastic
+  mesh changes, and legacy full-buffer checkpoints pack on load.
 * **Block-granular steps**: the sync-boundary trainer (DESIGN.md §4) saves at
   block boundaries, so step labels are boundary step counts — a resume always
   lands on a boundary and the step-indexed data stream continues without

@@ -114,6 +114,31 @@ class ModelConfig:
         """Params touched per token (MoE: shared + top_k experts)."""
         return _param_count(self, active_only=True)
 
+    def monitored_param_count(self) -> int:
+        """Params in the GradES-monitored per-layer matrices (attn + MLP
+        projections + stacked SSM matrices for hybrids — everything
+        ``core.grades._is_monitored`` picks up) — the pool whose dW FLOPs the
+        Tier-1.5 segment plan can eliminate (roofline §8 frozen-fraction
+        accounting).  Active-expert counting matches
+        ``active_param_count``'s FLOP convention."""
+        d = self.d_model
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.moe is not None:
+            mlp = 3 * d * self.moe.d_ff * self.moe.top_k \
+                + d * self.moe.n_experts  # router is monitored too
+        elif self.family == "xlstm":
+            mlp = 2 * d * max(self.d_ff, 2 * d)
+        else:
+            mlp = (3 if self.mlp_act == "swiglu" else 2) * d * self.d_ff
+        ssm = 0
+        if self.ssm is not None:
+            # every stacked (L, ...) ndim>=3 ssm matrix except the 2-d skip
+            di = self.ssm.expand * d
+            ssm = (d * 2 * di + di * (self.dt_rank + 2 * self.ssm.state_dim)
+                   + self.dt_rank * di + di * self.ssm.state_dim + di * d
+                   + di * self.ssm.conv_width)
+        return self.n_layers * (attn + mlp + ssm)
+
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), indent=2)
 
@@ -223,6 +248,12 @@ class TrainConfig:
     # batch shardings).  0 disables the thread: blocks are built synchronously
     # on the training thread (debug / deterministic-ordering mode).
     prefetch_depth: int = 2
+    # --- Tier 1.5: segmented layer scan (DESIGN.md §2) ---
+    # Max segments the per-layer freeze plan may split the layer scan into;
+    # also the boundary-quantization grid that bounds Tier-1.5 recompiles at
+    # segment_max * n_types over a whole run (core/partition.py::segment_plan).
+    # 1 degrades to the whole-type Tier-1 behavior (single monolithic scan).
+    segment_max: int = 8
     # early stopping baselines
     grades: GradESConfig = field(default_factory=GradESConfig)
     lora: Optional[LoRAConfig] = None
@@ -234,7 +265,10 @@ class TrainConfig:
     remat: str = "none"                  # "none" | "full" | "dots"
     fsdp: bool = True                    # shard params over the data axis too
     grad_compression: str = "none"       # "none" | "int8_ef"
-    # checkpointing
+    # checkpointing.  NOTE: with GradES static repartition on, the Tier-1/1.5
+    # freeze artifacts also refresh before each checkpoint (train/loop.py), so
+    # checkpoint_every is part of the numeric schedule — runs are
+    # bit-comparable only when their checkpoint boundaries coincide.
     checkpoint_dir: str = ""
     checkpoint_every: int = 0
     keep_checkpoints: int = 3

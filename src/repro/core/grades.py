@@ -194,22 +194,30 @@ def grades_update(state: GradESState, grads, spec: MonitorSpec, cfg: GradESConfi
     new_frozen, new_below, new_prev, new_pn, new_ln = {}, {}, {}, {}, {}
     for name, (paths, gran) in spec.groups.items():
         if cfg.monitor == "delta":
+            # Freezing is permanent, so frozen rows' monitor value is dead:
+            # both paths skip their delta pass (zero norm, prev untouched) —
+            # the kernel via its scalar-prefetched flag gate, the jnp path via
+            # the masks below (kernel-parity-tested).
+            frozen_now = state.frozen[name]
+            live = ~frozen_now
             norm = 0.0
-            gran_shape = state.frozen[name].shape
+            gran_shape = frozen_now.shape
             for p in paths:
                 g = get_path(grads, p)
                 if use_pallas and _dispatch.fused_ok(g, gran_shape, backend,
                                                      param_specs.get(p)):
                     raw, new_prev[p] = _dispatch.fused_grades_norm(
-                        g, state.prev[p], gran, backend, param_specs.get(p))
+                        g, state.prev[p], gran, backend, param_specs.get(p),
+                        flags=frozen_now)
                     if cfg.normalize:
                         raw = raw / _norm_divisor(g.shape, gran)
                     norm = norm + raw
                     continue
-                norm = norm + _group_l1(
+                norm = norm + jnp.where(live, _group_l1(
                     g.astype(jnp.float32) - state.prev[p].astype(jnp.float32),
-                    gran, cfg.normalize)
-                new_prev[p] = g.astype(jnp.bfloat16)
+                    gran, cfg.normalize), 0.0)
+                new_prev[p] = jnp.where(broadcast_mask(frozen_now, g),
+                                        state.prev[p], g.astype(jnp.bfloat16))
             g_norm = norm
         else:
             norm = 0.0

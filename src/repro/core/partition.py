@@ -1,20 +1,47 @@
-"""Tier-1 static repartition (DESIGN.md §2).
+"""Tier-1 static repartition and the Tier-1.5 segment planner (DESIGN.md §2).
 
-Once every (layer, expert) instance of a matrix *type* is frozen, the host re-jits
-``train_step`` with that type's stacked parameter wrapped in ``stop_gradient``: XLA
-then dead-code-eliminates the dW einsums for the type, shrinking the backward pass —
-the TPU-native analogue of ``requires_grad=False``.  The freeze sequence is monotone
-over at most #types recompiles (7 for the paper's set).
+Two levels of "static freeze" compose here, both driven by the tiny host-side
+copies of ``state.grades.frozen``:
 
-``static_frozen`` is carried as a frozenset of group names and is a *static* jit
-argument: each distinct set is a distinct compiled executable.
+* **Whole-type (Tier 1).**  Once every (layer, expert) instance of a matrix
+  *type* is frozen, the host re-jits ``train_step`` with that type's stacked
+  parameter wrapped in ``stop_gradient``: XLA dead-code-eliminates the dW
+  einsums for the type across every layer — the TPU-native analogue of
+  ``requires_grad=False``.
+* **Per-layer segments (Tier 1.5).**  During the long per-layer freeze
+  wavefront, whole-type elimination never fires even though most rows of a
+  type are frozen.  :func:`segment_plan` converts the per-layer masks into a
+  :class:`SegmentPlan`: layers are partitioned into contiguous runs whose
+  *freeze signature* (the set of types frozen at every layer of the run) is
+  equal, and the model replaces its single layer ``lax.scan`` with a chain of
+  per-segment scans, each applying ``stop_gradient`` to exactly its
+  signature's types (``models/transformer.py``).  Backward dW FLOPs then fall
+  with the frozen fraction instead of cliff-dropping at all-frozen.
+
+Recompile bound (the "boundary hysteresis").  The planner is a *pure function
+of the masks* — a resumed run recompiles the identical plan — and quantizes
+segment boundaries onto a fixed grid of ``segment_max`` cells (cell width
+``ceil(L / segment_max)``); a cell's signature is the intersection of its
+layers' signatures, and equal-signature neighbours are coalesced.  Boundaries
+therefore never track the wavefront layer-by-layer: a cell's signature grows
+only when the wavefront *completes* the cell.  Since per-layer signatures are
+monotone under GradES freezing, each cell signature is a monotone-growing
+intersection, so the plan changes at most once per (cell, type):
+
+    recompiles  ≤  segment_max · n_types       (regression-tested)
+
+versus ~L · n_types for a planner that chases every per-layer freeze.
+
+``static_frozen`` (whole-type) is carried as a frozenset of group names and
+the plan as a hashable :class:`SegmentPlan`; both are *static* per compiled
+step — each distinct pair is a distinct compiled executable.
 """
 from __future__ import annotations
 
-from typing import AbstractSet, Dict, FrozenSet, Sequence
+from dataclasses import dataclass
+from typing import AbstractSet, Dict, FrozenSet, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.grades import MonitorSpec, _key_path
@@ -48,10 +75,201 @@ def static_freeze_tree(params, spec: MonitorSpec,
 
 
 def trainable_mask(params, spec: MonitorSpec,
-                   static_frozen: AbstractSet[str]):
-    """Bool pytree: False for statically-frozen params (used to drop optimizer
-    state slots for frozen types — the Tier-1 memory saving)."""
+                   static_frozen: AbstractSet[str],
+                   row_frozen: Optional[Dict[str, "np.ndarray"]] = None):
+    """Pytree declaring which optimizer-moment storage each param needs.
+
+    Leaf values (consumed by ``optim/optimizer.py``):
+
+    * ``True``  — fully live: full-shape m/v buffers.
+    * ``False`` — statically frozen (whole type, or every row): 1-element
+      moment placeholder.
+    * ``np.ndarray`` (bool, granularity shape, True = **live** row) — the
+      Tier-1.5 per-row case: m/v store only the live rows
+      (``(n_live,) + trailing``), freeing 8 bytes/param for frozen rows
+      *before* the whole type freezes.  This function supports arbitrary
+      per-(layer, expert) masks; the trainer's plan-keyed source
+      (:func:`plan_row_masks`) emits whole-layer rows, so ``(L, E)`` types
+      free per layer-row rather than per expert (see :func:`plan_signature`).
+
+    ``row_frozen`` should be the **plan-quantized** masks from
+    :func:`plan_row_masks` (what the trainer passes), NOT the raw
+    ``device_get(state.grades.frozen)`` — raw masks would change the moment
+    layout on every per-layer freeze, defeating the plan's
+    ``segment_max · n_types`` recompile bound.  None keeps the legacy
+    whole-type behavior (also used under multi-device meshes, where packed
+    rows would break the divisibility of the moment shardings).
+    """
     frozen_paths = _static_paths(spec, static_frozen)
+    p2g = spec.path_to_group
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    leaves = [_key_path(kp) not in frozen_paths for kp, _ in flat]
+    leaves = []
+    for kp, leaf in flat:
+        path = _key_path(kp)
+        if path in frozen_paths:
+            leaves.append(False)
+            continue
+        group = p2g.get(path)
+        if row_frozen is None or group is None or group not in row_frozen:
+            leaves.append(True)
+            continue
+        mask = np.asarray(row_frozen[group], bool)
+        if not mask.any():
+            leaves.append(True)
+        elif mask.all():
+            leaves.append(False)
+        else:
+            leaves.append(~mask)
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Tier 1.5: the segment planner
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SegmentPlan:
+    """A chain of layer segments for the model's scan (DESIGN.md §2).
+
+    ``segments`` is a tuple of ``(lo, hi, signature)`` triples covering
+    ``[0, n_layers)`` contiguously; ``signature`` is the frozenset of
+    layer-subtree keys (e.g. ``"wq"``) whose dW is eliminated for every layer
+    in ``[lo, hi)`` via ``stop_gradient``.  Hashable and comparable — the
+    host re-jits exactly when the plan value changes.
+    """
+
+    segments: Tuple[Tuple[int, int, FrozenSet[str]], ...]
+
+    @property
+    def trivial(self) -> bool:
+        """One segment, nothing frozen: identical HLO to the monolithic scan."""
+        return len(self.segments) == 1 and not self.segments[0][2]
+
+    @property
+    def n_layers(self) -> int:
+        return self.segments[-1][1] if self.segments else 0
+
+
+def plan_signature(frozen_host: Dict[str, "np.ndarray"], spec: MonitorSpec,
+                   n_layers: int) -> List[FrozenSet[str]]:
+    """Per-layer freeze signature: the group names frozen at each layer.
+
+    A granularity-2 ``(L, E)`` group contributes a layer iff *all* its experts
+    are frozen there (per-layer, not all-or-nothing over the whole type).
+    Partially-frozen expert rows stay at Tier 0: their dW and their moments
+    wait until the full layer row freezes and the plan adopts it —
+    finer-than-layer packing would change the moment layout on freezes the
+    quantized plan ignores, breaking the recompile bound.
+    """
+    sigs: List[set] = [set() for _ in range(n_layers)]
+    for name in spec.groups:
+        m = np.asarray(frozen_host.get(name, False), bool)
+        if m.ndim < 1 or m.shape[0] != n_layers:
+            continue  # not a stacked-layer group; no per-layer skip possible
+        per_layer = m if m.ndim == 1 else m.reshape(m.shape[0], -1).all(axis=1)
+        for l in np.nonzero(per_layer)[0]:
+            sigs[int(l)].add(name)
+    return [frozenset(s) for s in sigs]
+
+
+def _layer_keys(spec: MonitorSpec, groups: AbstractSet[str]) -> FrozenSet[str]:
+    """Map group names to the layer-subtree keys the model applies
+    stop_gradient to (``"layers/wq" -> "wq"``; LoRA a/b pairs share a key)."""
+    keys = set()
+    for name in groups:
+        for path in spec.groups[name][0]:
+            if len(path) >= 2 and str(path[0]) == "layers":
+                keys.add(str(path[1]))
+    return frozenset(keys)
+
+
+def segment_plan(frozen_host: Dict[str, "np.ndarray"], spec: MonitorSpec,
+                 n_layers: int, segment_max: int) -> SegmentPlan:
+    """Partition layers into ≤ ``segment_max`` equal-signature segments.
+
+    Pure function of the masks (resume-deterministic).  Boundaries are
+    quantized onto a ``segment_max``-cell grid and a cell's signature is the
+    intersection of its layers' signatures (conservative: a type's dW is only
+    skipped where *every* layer of the segment has it frozen), then
+    equal-signature neighbours are coalesced — see the module docstring for
+    the resulting ``segment_max · n_types`` recompile bound.
+    """
+    segment_max = max(int(segment_max), 1)
+    if n_layers <= 0:
+        return SegmentPlan(segments=())
+    sigs = plan_signature(frozen_host, spec, n_layers)
+    q = -(-n_layers // segment_max)  # ceil: grid cell width
+    cells: List[Tuple[int, int, FrozenSet[str]]] = []
+    for lo in range(0, n_layers, q):
+        hi = min(lo + q, n_layers)
+        sig = frozenset.intersection(*sigs[lo:hi])
+        cells.append((lo, hi, sig))
+    merged = [cells[0]]
+    for lo, hi, sig in cells[1:]:
+        plo, _, psig = merged[-1]
+        if psig == sig:
+            merged[-1] = (plo, hi, sig)
+        else:
+            merged.append((lo, hi, sig))
+    return SegmentPlan(segments=tuple(
+        (lo, hi, _layer_keys(spec, sig)) for lo, hi, sig in merged))
+
+
+def plan_row_masks(plan: Optional[SegmentPlan], spec: MonitorSpec,
+                   frozen_host: Dict[str, "np.ndarray"]
+                   ) -> Optional[Dict[str, "np.ndarray"]]:
+    """Per-group frozen-row masks implied by the plan's skip set — the source
+    for Tier-1.5 moment packing (``trainable_mask(row_frozen=...)``).
+
+    Keying packing to the *plan* (itself a pure, quantized function of the
+    masks) rather than to the raw masks means the moment layout changes only
+    when the plan changes: the ``segment_max · n_types`` recompile bound
+    covers repacking too, and a resumed run re-derives the checkpoint's
+    stored layout from the restored masks alone.  Conservative by design:
+    rows the wavefront froze but the quantized plan has not yet adopted keep
+    full moments until the next plan change (they are already update-masked
+    at Tier 0).  A plan-skipped layer is frozen across every expert by
+    construction of the signature, so packing it is always safe.
+    """
+    if plan is None:
+        return None
+    L = plan.n_layers
+    out: Dict[str, "np.ndarray"] = {}
+    for name in spec.groups:
+        m = np.asarray(frozen_host.get(name, False), bool)
+        if m.ndim < 1 or m.shape[0] != L:
+            out[name] = np.zeros_like(m)  # non-stacked: never packed
+            continue
+        keys = _layer_keys(spec, {name})
+        per_layer = np.zeros(L, bool)
+        for lo, hi, sig in plan.segments:
+            if keys & sig:
+                per_layer[lo:hi] = True
+        out[name] = np.broadcast_to(
+            per_layer.reshape((L,) + (1,) * (m.ndim - 1)), m.shape).copy()
+    return out
+
+
+def plan_skipped_params(plan: Optional[SegmentPlan], layers,
+                        n_layers: int) -> int:
+    """Parameter count whose dW the plan's stop_gradient eliminates.
+
+    ``layers`` is the stacked layer-param subtree (arrays or
+    ShapeDtypeStructs); per-row count = leaf size / n_layers.  Feeds the
+    roofline's frozen-fraction dW term (``launch/roofline.py``, DESIGN.md §8).
+    Counts *stored* rows: for MoE expert stacks this is the all-expert count,
+    while the 6·N·D FLOP budget uses active (top_k) params —
+    ``model_flops_for`` caps the dW credit at the active monitored pool to
+    keep the units consistent.
+    """
+    if plan is None or n_layers <= 0:
+        return 0
+    total = 0
+    for lo, hi, sig in plan.segments:
+        for key in sig:
+            if key not in layers:
+                continue
+            leaf_sz = sum(int(np.prod(l.shape))
+                          for l in jax.tree.leaves(layers[key]))
+            total += (hi - lo) * (leaf_sz // n_layers)
+    return total

@@ -222,42 +222,55 @@ def _slice_flags(flags, gran_parts, mesh: Mesh):
     return flags
 
 
-def _local_grades_norm(g, prev, gran: int, backend: KernelBackend):
+def _local_grades_norm(g, prev, gran: int, backend: KernelBackend,
+                       flags=None):
     """Single-shard Eq.-1 body: (partial norm shaped ``g.shape[:gran]``,
-    new_prev shaped like ``g``) in one kernel pass."""
+    new_prev shaped like ``g``) in one kernel pass; ``flags`` (freeze state,
+    shape ``g.shape[:gran]``) gates frozen rows to a flag load."""
     gran_shape = g.shape[:gran]
     norm, new_prev = ops.grades_norm(_collapse_gran(g, gran),
                                      _collapse_gran(prev, gran),
+                                     None if flags is None
+                                     else flags.reshape(-1),
                                      interpret=backend.interpret)
     return norm.reshape(gran_shape), new_prev.reshape(g.shape)
 
 
 def fused_grades_norm(g, prev, gran: int, backend: KernelBackend,
-                      pspec: Optional[P] = None):
+                      pspec: Optional[P] = None, flags=None):
     """Fused Eq.-1 monitor: returns (unnormalized L1 delta-norm with shape
     ``g.shape[:gran]``, new_prev shaped like ``g``).
+
+    ``flags`` is the group's freeze array (shape = the ``gran`` leading axes
+    of ``g``): frozen rows skip the delta pass entirely — zero norm, ``prev``
+    kept — matching the gated jnp path in ``core/grades.py``.
 
     Under a sharded backend the kernel runs per shard via shard_map: each
     shard reduces its local trailing elements, then partials are ``psum``'d
     over exactly the mesh axes that shard trailing dims, so the result equals
-    the single-device norm (up to float reduction order).
+    the single-device norm (up to float reduction order).  Flags enter
+    replicated and are sliced to the shard's granularity rows, as in
+    :func:`fused_masked_update`.
     """
     if not backend.sharded:
-        return _local_grades_norm(g, prev, gran, backend)
+        return _local_grades_norm(g, prev, gran, backend, flags)
     mesh = backend.mesh
     parts = _pad_spec(pspec, g.ndim)
     trailing_axes = tuple(a for part in parts[gran:] for a in _part_axes(part))
+    if flags is None:
+        flags = jnp.zeros(g.shape[:gran], bool)
 
-    def local(g_l, prev_l):
-        norm, new_prev = _local_grades_norm(g_l, prev_l, gran, backend)
+    def local(g_l, prev_l, flags_full):
+        fl = _slice_flags(flags_full, parts[:gran], mesh)
+        norm, new_prev = _local_grades_norm(g_l, prev_l, gran, backend, fl)
         if trailing_axes:
             norm = jax.lax.psum(norm, trailing_axes)
         return norm, new_prev
 
     return shard_map(local, mesh=mesh,
-                     in_specs=(P(*parts), P(*parts)),
+                     in_specs=(P(*parts), P(*parts), P()),
                      out_specs=(P(*parts[:gran]), P(*parts)),
-                     check_rep=False)(g, prev)
+                     check_rep=False)(g, prev, flags)
 
 
 def _local_masked_update(p, g, m, v, flags, lr, count, tcfg,

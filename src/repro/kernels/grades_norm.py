@@ -1,15 +1,23 @@
-"""Pallas TPU kernel: fused GradES monitor op (paper Eq. 1).
+"""Pallas TPU kernel: fused GradES monitor op (paper Eq. 1), freeze-gated.
 
-Computes, for a stacked gradient tensor ``g (L, M, N)`` and the stored previous
-gradient ``prev (L, M, N)``::
+Computes, for a stacked gradient tensor ``g (L, M, N)``, the stored previous
+gradient ``prev (L, M, N)`` and per-layer freeze flags ``frozen (L,)``::
 
-    norm[l]  = sum_{ij} | g[l] - prev[l] |        (element-wise L1 of the delta)
-    prev'    = g                                   (copy-back for the next step)
+    norm[l]  = sum_{ij} | g[l] - prev[l] |   if not frozen[l] else 0
+    prev'[l] = g[l]                          if not frozen[l] else prev[l]
 
 in ONE pass: the unfused jnp version reads g and prev to form ``|g-prev|``, reads
 the temporary to reduce it, and writes prev' separately — ≥4 HBM passes over the
 gradient bytes; this kernel does 2 reads + 1 write (the roofline minimum) with the
 partial L1 accumulated in VMEM across the N-tile loop.
+
+Freezing is permanent (GradES monotonicity), so a frozen layer's monitor value
+can never un-freeze it — its 2 reads + 1 ``prev`` write-back are pure waste.
+The flags ride in a full-array (ANY/SMEM-like) spec exactly like
+``masked_adamw``'s, so the predicate is known before the tile DMAs are issued
+and a frozen layer costs one flag load; ``input_output_aliases`` pins ``prev'``
+onto ``prev`` so the frozen copy-through is a no-op store on hardware (the
+explicit copy is required for interpret-mode correctness).
 
 Grid: (L, M/bm, N/bn), sequential on TPU, so the (1,1) accumulator block for layer
 ``l`` is initialized at the first (i,j) tile and accumulated in place after.
@@ -31,24 +39,37 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(g_ref, prev_ref, norm_ref, newprev_ref):
+def _kernel(flags_ref, g_ref, prev_ref, norm_ref, newprev_ref):
+    l = pl.program_id(0)
     i = pl.program_id(1)
     j = pl.program_id(2)
+    live = flags_ref[l] == 0
 
     @pl.when((i == 0) & (j == 0))
     def _init():
         norm_ref[0, 0] = 0.0
 
-    g = g_ref[0]
-    delta = (g.astype(jnp.float32) - prev_ref[0].astype(jnp.float32))
-    norm_ref[0, 0] += jnp.sum(jnp.abs(delta))
-    newprev_ref[0] = g.astype(newprev_ref.dtype)
+    @pl.when(live)
+    def _update():
+        g = g_ref[0]
+        delta = (g.astype(jnp.float32) - prev_ref[0].astype(jnp.float32))
+        norm_ref[0, 0] += jnp.sum(jnp.abs(delta))
+        newprev_ref[0] = g.astype(newprev_ref.dtype)
+
+    @pl.when(jnp.logical_not(live))
+    def _skip():
+        # Copy-through: a no-op store under input/output aliasing on TPU;
+        # interpret mode needs the explicit write.
+        newprev_ref[0] = prev_ref[0]
 
 
-def grades_norm_kernel(g, prev, *, block_m: int = 256, block_n: int = 512,
-                       interpret: bool = True):
-    """g, prev: (L, M, N) -> (norm (L,), new_prev (L, M, N))."""
+def grades_norm_kernel(g, prev, frozen=None, *, block_m: int = 256,
+                       block_n: int = 512, interpret: bool = True):
+    """g, prev: (L, M, N); frozen: (L,) bool/int or None (all live)
+    -> (norm (L,), new_prev (L, M, N))."""
     L, M, N = g.shape
+    flags = (jnp.zeros((L,), jnp.int32) if frozen is None
+             else frozen.astype(jnp.int32))
     bm, bn = min(block_m, M), min(block_n, N)
     # pad-free requirement: tests sweep ragged shapes via the ops-level wrapper
     assert M % bm == 0 and N % bn == 0, (g.shape, bm, bn)
@@ -57,6 +78,7 @@ def grades_norm_kernel(g, prev, *, block_m: int = 256, block_n: int = 512,
         _kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # flags: full, SMEM-like
             pl.BlockSpec((1, bm, bn), lambda l, i, j: (l, i, j)),
             pl.BlockSpec((1, bm, bn), lambda l, i, j: (l, i, j)),
         ],
@@ -68,6 +90,7 @@ def grades_norm_kernel(g, prev, *, block_m: int = 256, block_n: int = 512,
             jax.ShapeDtypeStruct((L, 1), jnp.float32),
             jax.ShapeDtypeStruct(g.shape, prev.dtype),
         ],
+        input_output_aliases={2: 1},
         interpret=interpret,
-    )(g, prev)
+    )(flags, g, prev)
     return norm[:, 0], new_prev

@@ -46,14 +46,20 @@ def _blocks(shape3, block_m, block_n):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_m", "block_n"))
-def grades_norm(g, prev, *, interpret: bool = True, block_m: int = 256,
-                block_n: int = 512):
-    """Fused GradES monitor: (norm (L,), new_prev) for stacked (L, ...) grads."""
+def grades_norm(g, prev, frozen=None, *, interpret: bool = True,
+                block_m: int = 256, block_n: int = 512):
+    """Fused GradES monitor: (norm (L,), new_prev) for stacked (L, ...) grads.
+
+    ``frozen`` ((L,) bool, optional) gates the kernel per layer: frozen rows
+    report a zero norm and keep ``prev`` untouched (one flag load instead of
+    2 reads + 1 write — freezing is permanent, so their monitor value is dead).
+    """
     shape = g.shape
     g3 = _canon3(g)
     bm, bn = _blocks(g3.shape, block_m, block_n)
-    norm, new_prev = _gn.grades_norm_kernel(g3, _canon3(prev), block_m=bm,
-                                            block_n=bn, interpret=interpret)
+    norm, new_prev = _gn.grades_norm_kernel(g3, _canon3(prev), frozen,
+                                            block_m=bm, block_n=bn,
+                                            interpret=interpret)
     return norm, new_prev.reshape(shape)
 
 

@@ -317,17 +317,49 @@ def derive_terms(*, arch: str, shape: str, mesh_name: str, chips: int,
         roofline_frac=frac)
 
 
-def model_flops_for(cfg, cell) -> float:
-    """MODEL_FLOPS: 6·N·D train, 2·N·D decode/prefill (N = active params)."""
+def model_flops_for(cfg, cell, dw_skip_params: float = 0.0) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N·D decode/prefill (N = active params).
+
+    ``dw_skip_params`` (train cells only) is the parameter count whose dW
+    einsums the Tier-1.5 segment plan eliminates
+    (``core.partition.plan_skipped_params``): the 6·N·D train budget is
+    fwd 2·N·D + dX 2·N·D + dW 2·N·D, and a frozen (layer, type) row removes
+    exactly its 2·params·tokens dW term — so modeled backward FLOPs fall
+    linearly with the frozen fraction of the monitored pool
+    (``cfg.monitored_param_count()``), per the GradES claim (DESIGN.md §8).
+    """
     n = cfg.active_param_count()
     tokens = cell.global_batch * (1 if cell.kind == "decode" else cell.seq_len)
     mult = 6.0 if cell.kind == "train" else 2.0
     flops = mult * n * tokens
+    if cell.kind == "train" and dw_skip_params:
+        # ``plan_skipped_params`` counts *stored* rows; the 6·N·D budget uses
+        # active-expert params, so cap the credit at the active monitored
+        # pool — MoE stored-expert counts would otherwise over-subtract
+        # (each expert row's realized dW is scaled by its top_k/E token
+        # share, which the active-param convention already folds in).
+        skip = min(float(dw_skip_params), float(cfg.monitored_param_count()))
+        flops -= 2.0 * skip * tokens
     if cell.kind == "decode" and not cfg.subquadratic:
         # attention reads over the KV cache dominate decode; keep the matmul
         # convention (documented) — cache traffic shows up in the memory term.
         pass
     return flops
+
+
+def grades_dw_curve(cfg, cell, fracs=(0.0, 0.25, 0.5, 0.75, 1.0)):
+    """Modeled step-FLOP curve vs per-layer frozen fraction of the monitored
+    matrices — the quantity the segmented layer scan (Tier 1.5) realizes and
+    ``benchmarks/bench_kernels.py`` checks measured step times against."""
+    pool = cfg.monitored_param_count()
+    base = model_flops_for(cfg, cell)
+    rows = []
+    for f in fracs:
+        flops = model_flops_for(cfg, cell, dw_skip_params=f * pool)
+        rows.append({"frozen_frac": f, "model_flops": flops,
+                     "dw_skip_params": f * pool,
+                     "flop_speedup": base / flops if flops else 0.0})
+    return rows
 
 
 def top_costs(txt: str, n: int = 20, *, default_dynamic_trip: float = 1.0):

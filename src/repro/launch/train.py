@@ -57,6 +57,10 @@ def main():
     ap.add_argument("--prefetch-depth", type=int, default=2,
                     help="batch blocks staged ahead by the background "
                          "prefetch thread (0 = synchronous, no thread)")
+    ap.add_argument("--segment-max", type=int, default=8,
+                    help="Tier-1.5 segment cap: max per-layer freeze segments "
+                         "the layer scan splits into (bounds recompiles at "
+                         "segment_max * n_types; 1 = whole-type Tier 1 only)")
     ap.add_argument("--attn-chunk-threshold", type=int, default=0,
                     help="override ModelConfig.attn_chunk_threshold (seq len "
                          "where the jnp fallback switches full -> blockwise)")
@@ -75,6 +79,7 @@ def main():
         seq_len=seq, global_batch=batch, steps=args.steps, lr=args.lr,
         optimizer=args.optimizer, remat=args.remat, kernels=args.kernels,
         sync_interval=args.sync_interval, prefetch_depth=args.prefetch_depth,
+        segment_max=args.segment_max,
         lora=LoRAConfig(rank=args.lora_rank) if args.lora_rank else None,
         val_es=args.val_es,
         checkpoint_dir=args.ckpt, checkpoint_every=args.ckpt_every,

@@ -34,11 +34,20 @@ def param_logical_axes(cfg: ModelConfig, model_size=None):
     return _mod(cfg).param_logical_axes(cfg, model_size)
 
 
+def supports_segment_plan(cfg: ModelConfig) -> bool:
+    """Whether this family's forward consumes a Tier-1.5 SegmentPlan (the
+    stacked-layer transformer scan; encdec/xlstm keep whole-type Tier 1)."""
+    return _mod(cfg) is transformer
+
+
 def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *, remat: str = "none",
-            attn_args=None):
+            attn_args=None, plan=None):
     if cfg.family == "encdec":
         logits, aux = encdec.forward(params, cfg, batch["tokens"], batch["frames"],
                                      remat=remat, attn_args=attn_args)
+    elif supports_segment_plan(cfg):
+        logits, aux = transformer.forward(params, cfg, batch["tokens"], remat=remat,
+                                          attn_args=attn_args, plan=plan)
     else:
         logits, aux = _mod(cfg).forward(params, cfg, batch["tokens"], remat=remat,
                                         attn_args=attn_args)
@@ -46,8 +55,9 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *, remat: str = "no
 
 
 def loss_fn(params, batch: Dict[str, Any], cfg: ModelConfig, *, remat: str = "none",
-            attn_args=None):
-    logits, aux = forward(params, cfg, batch, remat=remat, attn_args=attn_args)
+            attn_args=None, plan=None):
+    logits, aux = forward(params, cfg, batch, remat=remat, attn_args=attn_args,
+                          plan=plan)
     ce = cross_entropy(logits, batch["labels"])
     loss = ce + aux
     return loss, {"loss": loss, "ce": ce, "aux_loss": aux}

@@ -4,6 +4,15 @@ Layers are *stacked* (leading L axis) and iterated with ``jax.lax.scan`` so the 
 stays compact for 40–62-layer configs (one while-loop, not L inlined blocks); this is
 also what makes GradES's per-(layer, type) freeze masks representable as (L,) boolean
 vectors (see repro/core/grades.py).
+
+Tier 1.5 (DESIGN.md §2): when a :class:`~repro.core.partition.SegmentPlan` is
+passed, the single scan is replaced by a chain of **segment scans** — each
+segment slices its ``[lo, hi)`` rows of the stacked params (static bounds) and
+applies ``stop_gradient`` to exactly its signature's matrix types, so the
+backward pass never builds those segments' dW einsums and per-layer freezes
+shrink FLOPs without waiting for a whole type to converge.  Forward values and
+the surviving gradients are bit-identical to the monolithic scan (same per-layer
+op sequence; slicing only re-groups the loop).
 """
 from __future__ import annotations
 
@@ -210,12 +219,41 @@ def decoder_block(x, lp, cfg: ModelConfig, positions, *, ssm_state=None,
 # Forward (training / prefill) via scan over stacked layers
 # ---------------------------------------------------------------------------
 
+def scan_layers(body, x, layers, plan=None):
+    """Run ``body`` over the stacked layer params — one ``lax.scan``, or the
+    plan's chain of segment scans (Tier 1.5, DESIGN.md §2).
+
+    Each segment takes a static ``[lo, hi)`` slice of every stacked leaf and
+    wraps its signature's types in ``stop_gradient`` *outside* the scan, so
+    JAX's partial evaluation treats them as constants and the backward scan
+    for the segment contains no dW computation for them at all.  Per-segment
+    ys are concatenated back to the full ``(L, ...)`` stacks, keeping the
+    collected KV-cache layout identical to the monolithic scan.
+    """
+    if plan is None or plan.trivial:
+        return jax.lax.scan(body, x, layers)
+    ys_parts = []
+    for lo, hi, sig in plan.segments:
+        seg = jax.tree.map(
+            lambda a: jax.lax.slice_in_dim(a, lo, hi, axis=0), layers)
+        if sig:
+            seg = {k: (jax.tree.map(jax.lax.stop_gradient, sub) if k in sig
+                       else sub) for k, sub in seg.items()}
+        x, ys = jax.lax.scan(body, x, seg)
+        ys_parts.append(ys)
+    if len(ys_parts) == 1:
+        return x, ys_parts[0]
+    return x, jax.tree.map(lambda *p: jnp.concatenate(p, axis=0), *ys_parts)
+
+
 def forward(params, cfg: ModelConfig, tokens, *, remat: str = "none",
             collect_cache: bool = False, cache_window: int = 0,
-            attn_args: Optional[Dict[str, Any]] = None):
+            attn_args: Optional[Dict[str, Any]] = None, plan=None):
     """tokens: (B, S) int32 -> (logits, aux).
 
     With ``collect_cache`` also returns the per-layer KV/SSM state for decode.
+    ``plan`` (a :class:`~repro.core.partition.SegmentPlan`, static per jit)
+    segments the layer scan for per-layer backward-FLOP elimination.
     """
     attn_args = attn_args or {}
     B, S = tokens.shape
@@ -249,7 +287,7 @@ def forward(params, cfg: ModelConfig, tokens, *, remat: str = "none",
         body = jax.checkpoint(
             body, policy=jax.checkpoint_policies.checkpoint_dots_no_batch_dims)
 
-    x, ys = jax.lax.scan(body, x, params["layers"])
+    x, ys = scan_layers(body, x, params["layers"], plan)
     x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
     head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]).astype(cfg.dtype)
     logits = x @ head
@@ -282,13 +320,13 @@ def init_cache(params, cfg: ModelConfig, batch: int, max_len: int):
 
 
 def prefill(params, cfg: ModelConfig, tokens, max_len: int,
-            attn_args: Optional[Dict[str, Any]] = None):
+            attn_args: Optional[Dict[str, Any]] = None, plan=None):
     """Full-sequence forward that also builds the decode cache."""
     B, S = tokens.shape
     C = cache_len(cfg, max_len)
     logits, aux, ys = forward(params, cfg, tokens, collect_cache=True,
                               cache_window=C if cfg.swa_window else 0,
-                              attn_args=attn_args)
+                              attn_args=attn_args, plan=plan)
     k, v = ys["k"], ys["v"]  # (L, B, min(S,C), KV, hd)
     if k.shape[2] < C:
         zeros = jnp.zeros(k.shape[:2] + (C - k.shape[2],) + k.shape[3:], k.dtype)

@@ -1,6 +1,6 @@
 """Optimizers (AdamW / SGD-momentum) with GradES-aware masked updates.
 
-Two masking tiers compose here (DESIGN.md §2):
+Three masking tiers compose here (DESIGN.md §2):
 
 * ``freeze_masks`` (dynamic, per step): boolean pytree from GradES; a frozen
   matrix's parameters and moments are left bit-identical — exactly the paper's
@@ -8,6 +8,15 @@ Two masking tiers compose here (DESIGN.md §2):
 * ``trainable`` (static, per repartition): params statically frozen by Tier-1 hold a
   1-element moment placeholder instead of full m/v buffers, freeing 8 bytes/param
   of optimizer state for converged matrix types.
+* **Per-row placeholders (Tier 1.5)**: a ``trainable`` leaf may be a host-side
+  boolean *row mask* (granularity shape, True = live), in which case m/v store
+  only the live rows — ``(n_live,) + trailing`` — so frozen (layer, expert)
+  rows free their 8 bytes/param *before* the whole type converges.  The update
+  gathers live rows with static indices (compile-time slices), runs the fused
+  or jnp update on the packed arrays, and scatters params back; frozen rows
+  stay bit-identical.  ``align_moments`` re-packs m/v at sync boundaries and
+  after checkpoint restore (packing is a pure function of the boundary masks,
+  so a resumed run re-derives the identical layout).
 
 Moments can be stored in bf16 (``opt_state_dtype``) for trillion-parameter configs.
 """
@@ -18,6 +27,7 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import TrainConfig
 
@@ -37,13 +47,34 @@ def _placeholder(dtype):
     return jnp.zeros((1,), dtype)
 
 
+def _is_row_mask(t) -> bool:
+    return isinstance(t, np.ndarray)
+
+
+def _live_rows(t: "np.ndarray") -> "np.ndarray":
+    """Static indices of the live rows in the collapsed granularity axis."""
+    return np.nonzero(np.asarray(t, bool).reshape(-1))[0]
+
+
+def moment_shape(p, t):
+    """Expected m/v shape for a param under a ``trainable`` leaf value."""
+    if _is_row_mask(t):
+        n_live = int(np.asarray(t, bool).sum())
+        return ((n_live,) + tuple(p.shape[t.ndim:])) if n_live else (1,)
+    return tuple(p.shape) if t else (1,)
+
+
+def _moment_zeros(p, t, dt):
+    shape = moment_shape(p, t)
+    return _placeholder(dt) if shape == (1,) else jnp.zeros(shape, dt)
+
+
 def init_opt_state(params, tcfg: TrainConfig, trainable=None) -> OptState:
     dt = jnp.dtype(tcfg.opt_state_dtype)
     if trainable is None:
         trainable = jax.tree.map(lambda _: True, params)
-    zeros = jax.tree.map(
-        lambda p, t: jnp.zeros(p.shape, dt) if t else _placeholder(dt),
-        params, trainable)
+    zeros = jax.tree.map(lambda p, t: _moment_zeros(p, t, dt),
+                         params, trainable)
     if tcfg.optimizer == "sgd":
         return OptState(count=jnp.zeros((), jnp.int32), m=zeros,
                         v=jax.tree.map(lambda _: _placeholder(dt), params))
@@ -85,6 +116,12 @@ def apply_updates(params, grads, opt: OptState, tcfg: TrainConfig, *,
     ``param_specs`` (path -> PartitionSpec) drives the shard_map wrapping of
     the kernels under a sharded backend; leaves without a usable spec take the
     jnp path (one-time warning when pallas was forced).
+
+    A ``trainable`` leaf that is a boolean row mask (Tier 1.5) routes through
+    the packed-row path: live rows are gathered with *static* indices, the
+    packed m/v (``(n_live,) + trailing``) are updated — through the same fused
+    kernel when eligible — and only the live rows of ``p`` are scattered back,
+    so frozen rows stay bit-identical without streaming their moments.
     """
     from repro.core.grades import _key_path, broadcast_mask
     from repro.kernels import dispatch as _dispatch
@@ -145,6 +182,14 @@ def apply_updates(params, grads, opt: OptState, tcfg: TrainConfig, *,
                                              flat_v, flat_mask, flat_train):
         group = p2g.get(path) if group_frozen is not None else None
         flags = group_frozen[group] if group is not None else None
+        if _is_row_mask(train):
+            pn, mn, vn = _packed_row_update(
+                p, g, m, v, train, flags, lr, count, tcfg, use_pallas,
+                backend, upd)
+            new_p.append(pn)
+            new_m.append(mn)
+            new_v.append(vn)
+            continue
         if (use_pallas and train and flags is not None
                 and _dispatch.fused_ok(p, flags.shape, backend,
                                        param_specs.get(path))
@@ -164,3 +209,154 @@ def apply_updates(params, grads, opt: OptState, tcfg: TrainConfig, *,
     return (unflat(treedef, new_p),
             OptState(count=count, m=unflat(treedef, new_m),
                      v=unflat(treedef, new_v)))
+
+
+def _packed_row_update(p, g, m, v, row_mask, flags, lr, count,
+                       tcfg: TrainConfig, use_pallas: bool, backend, upd):
+    """Tier-1.5 update for one leaf whose moments hold live rows only.
+
+    ``row_mask`` is the host boolean live-row mask (granularity shape); its
+    nonzero indices are compile-time constants, so the gathers/scatter lower
+    to static slices.  ``flags`` (the group's *dynamic* freeze array) still
+    masks rows that froze since the last boundary.
+    """
+    from repro.core.grades import broadcast_mask
+    from repro.kernels import dispatch as _dispatch
+
+    live_idx = _live_rows(row_mask)
+    if live_idx.size == 0:
+        return p, m, v
+    gran = row_mask.ndim
+    trailing = p.shape[gran:]
+    pc = p.reshape((-1,) + trailing)
+    p_live = pc[live_idx]
+    g_live = g.reshape((-1,) + trailing)[live_idx]
+    fl_live = (flags.reshape(-1)[live_idx] if flags is not None
+               else jnp.zeros((live_idx.size,), bool))
+    # A row-masked trainable leaf MUST come paired with align_moments-packed
+    # buffers — a silent no-update here would de-facto freeze the leaf, so
+    # fail at trace time instead.
+    if m.shape != p_live.shape or (tcfg.optimizer != "sgd"
+                                   and v.shape != p_live.shape):
+        raise ValueError(
+            f"per-row trainable mask expects moments packed to "
+            f"{p_live.shape}, got m{tuple(m.shape)}/v{tuple(v.shape)} — "
+            f"run align_moments before building the step")
+    if (use_pallas and not backend.sharded
+            and _dispatch.fused_eligible(p_live, fl_live.shape)):
+        pn_live, mn, vn = _dispatch.fused_masked_update(
+            p_live, g_live, m, v, fl_live, lr, count, tcfg, backend, None)
+    else:
+        pn_live, mn, vn = upd(p_live, g_live, m, v,
+                              broadcast_mask(fl_live, p_live), True)
+    pn = pc.at[live_idx].set(pn_live).reshape(p.shape)
+    return pn, mn, vn
+
+
+def align_moments(opt: OptState, params, tcfg: TrainConfig, trainable,
+                  old_trainable=None) -> OptState:
+    """Re-pack per-row moment buffers to match ``trainable`` (Tier 1.5).
+
+    Called at sync boundaries when new rows froze (``old_trainable`` is the
+    previous layout; monotone freezing guarantees new live ⊆ old live) and
+    after checkpoint restore (``old_trainable=None``: the stored layout is
+    recognized by shape — packed checkpoints restore across plan changes
+    because packing is a pure function of the restored masks, and legacy
+    full-buffer or whole-type-placeholder checkpoints are packed/kept as
+    needed).  Returns ``opt`` itself when nothing changes.
+    """
+    flat_kp, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_p = [leaf for _, leaf in flat_kp]
+    flat_m = treedef.flatten_up_to(opt.m)
+    flat_v = treedef.flatten_up_to(opt.v)
+    flat_t = treedef.flatten_up_to(trainable)
+    flat_t_old = (treedef.flatten_up_to(old_trainable)
+                  if old_trainable is not None else [None] * len(flat_p))
+    dt = jnp.dtype(tcfg.opt_state_dtype)
+    changed = False
+    new_m, new_v = [], []
+    for p, m, v, t, t_old in zip(flat_p, flat_m, flat_v, flat_t, flat_t_old):
+        em = _align_leaf(p, m, t, t_old, dt)
+        ev = v if tcfg.optimizer == "sgd" else _align_leaf(p, v, t, t_old, dt)
+        changed |= em is not m or ev is not v
+        new_m.append(em)
+        new_v.append(ev)
+    if not changed:
+        return opt
+    unflat = jax.tree_util.tree_unflatten
+    return OptState(count=opt.count, m=unflat(treedef, new_m),
+                    v=unflat(treedef, new_v))
+
+
+def expand_moments_host(opt: OptState, params, tcfg: TrainConfig,
+                        trainable) -> OptState:
+    """Host-side (numpy) expansion of row-packed moment buffers to full
+    shape, for checkpointing: packed rows are ``device_get`` and scattered
+    into host zeros, so the full-size buffers never materialize in device
+    memory (that would transiently re-spend the exact HBM the packing freed).
+    Full buffers and placeholders pass through untouched; the returned
+    OptState mixes device and numpy leaves and is only suitable for saving.
+    """
+    flat_kp, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_p = [leaf for _, leaf in flat_kp]
+    flat_m = treedef.flatten_up_to(opt.m)
+    flat_v = treedef.flatten_up_to(opt.v)
+    flat_t = treedef.flatten_up_to(trainable)
+    changed = False
+
+    def one(p, cur, t):
+        nonlocal changed
+        if not _is_row_mask(t) or tuple(cur.shape) != moment_shape(p, t) \
+                or cur.size == 1:
+            return cur  # full / placeholder / sgd-v stub
+        host = np.asarray(jax.device_get(cur))
+        full = np.zeros((int(np.prod(p.shape[:t.ndim])),) + host.shape[1:],
+                        host.dtype)
+        full[_live_rows(t)] = host
+        changed = True
+        return full.reshape(p.shape)
+
+    new_m = [one(p, m, t) for p, m, t in zip(flat_p, flat_m, flat_t)]
+    new_v = (flat_v if tcfg.optimizer == "sgd"
+             else [one(p, v, t) for p, v, t in zip(flat_p, flat_v, flat_t)])
+    if not changed:
+        return opt
+    unflat = jax.tree_util.tree_unflatten
+    return OptState(count=opt.count, m=unflat(treedef, new_m),
+                    v=unflat(treedef, new_v))
+
+
+def _align_leaf(p, cur, t, t_old, dt):
+    target = moment_shape(p, t)
+    if tuple(cur.shape) == target:
+        return cur
+    if target == (1,):
+        return _placeholder(cur.dtype if cur.size > 1 else dt)
+    if tuple(cur.shape) == tuple(p.shape):
+        # full buffer (live run at its first per-row freeze, or a legacy /
+        # expanded checkpoint): gather the target live rows
+        gran = t.ndim if _is_row_mask(t) else 0
+        return cur.reshape((-1,) + tuple(p.shape[gran:]))[_live_rows(t)]
+    if t_old is not None and _is_row_mask(t_old) \
+            and tuple(cur.shape) == moment_shape(p, t_old):
+        old_idx = _live_rows(t_old)
+        if not _is_row_mask(t):
+            # packed checkpoint restored where packing is off (e.g. onto a
+            # multi-device mesh): expand back to a full buffer — the packed-
+            # out rows are frozen, so their (dead) moments re-init as zeros
+            trailing = tuple(p.shape[t_old.ndim:])
+            full = jnp.zeros((int(np.prod(p.shape[:t_old.ndim])),) + trailing,
+                             cur.dtype)
+            return full.at[old_idx].set(cur).reshape(p.shape)
+        new_idx = _live_rows(t)
+        pos = np.searchsorted(old_idx, new_idx)
+        if (pos >= old_idx.size).any() or \
+                not np.array_equal(old_idx[pos], new_idx):
+            raise ValueError(
+                "non-monotone moment repack: new live rows are not a subset "
+                "of the previous layout")
+        return cur[pos]
+    raise ValueError(
+        f"cannot align moment buffer of shape {tuple(cur.shape)} to target "
+        f"{target} for a param of shape {tuple(p.shape)} — unknown packing "
+        f"provenance (checkpoint saved under incompatible freeze masks?)")

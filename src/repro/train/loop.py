@@ -9,16 +9,28 @@ sampled, stacked and ``jax.device_put`` on a background thread
 bookkeeping overlaps device execution:
 
 * Tier 0 (in-jit freeze masks) lives in the compiled step.
-* Tier 1: at boundaries aligned to ``round_up(repartition_interval, K)`` the
-  host reads the (tiny) frozen masks; newly fully-frozen matrix *types*
-  trigger a re-jit with stop_gradient applied to them — backward FLOPs
-  genuinely shrink (bounded recompiles ≤ #types).  Runs with different
-  ``sync_interval`` are bit-identical when they resolve to the same aligned
-  interval (``repartition_interval`` a common multiple of the K values
-  compared): the re-jit then lands on the same global step either way.  With
-  a misaligned interval the re-jit shifts to the next K-boundary — still
-  correct, but the stop_gradient changes the global-norm clip denominator,
-  so the runs are no longer bit-comparable.
+* Tier 1 / 1.5: at boundaries aligned to ``round_up(repartition_interval,
+  K)`` the host reads the (tiny) frozen masks and derives three static
+  artifacts — the whole-type ``static_frozen`` set, the per-layer
+  :class:`~repro.core.partition.SegmentPlan` (the layer scan is re-jit as a
+  chain of segment scans whose signatures' dW einsums XLA never builds), and
+  the per-row ``row_frozen`` masks that pack optimizer moments to live rows
+  (``optim.optimizer.align_moments`` repacks the live state before the
+  re-jit).  All three are pure functions of the masks, so a resumed run
+  re-derives them identically; recompiles are bounded at
+  ``segment_max · n_types`` by the planner's grid quantization
+  (DESIGN.md §2).  Runs with different ``sync_interval`` are bit-identical
+  when they resolve to the same aligned interval (``repartition_interval`` a
+  common multiple of the K values compared): the re-jit then lands on the
+  same global step either way.  With a misaligned interval the re-jit shifts
+  to the next K-boundary — still correct, but the stop_gradient changes the
+  global-norm clip denominator, so the runs are no longer bit-comparable.
+  The artifacts also refresh at *checkpoint* boundaries (so a resume — which
+  unavoidably applies the masks saved at the checkpoint step — re-derives
+  exactly the uninterrupted run's state): the checkpoint cadence is thereby
+  part of the numeric schedule, and runs are bit-comparable only when their
+  checkpoint boundaries coincide too (``checkpoint_every`` aligned, or
+  checkpointing off).
 * Tier 2: when every monitored matrix is frozen, training terminates
   (Algorithm 1 line 24).  Detection needs no mid-block readback — the scan
   body itself no-ops every step past the all-frozen point, so the block the
@@ -44,6 +56,7 @@ bookkeeping overlaps device execution:
 from __future__ import annotations
 
 import collections
+import dataclasses
 import json
 import os
 import time
@@ -56,11 +69,14 @@ import numpy as np
 from repro.checkpoint.manager import CheckpointManager
 from repro.config import ModelConfig, TrainConfig
 from repro.core.grades import build_monitor_spec
-from repro.core.partition import fully_frozen_types
+from repro.core.partition import (fully_frozen_types, plan_row_masks,
+                                  segment_plan, trainable_mask)
 from repro.data.pipeline import Prefetcher, make_batches
 from repro.distributed.sharding import active_mesh, active_rules
 from repro.kernels.dispatch import resolve_backend
 from repro.kernels.flash_attention import round_up
+from repro.models.model import supports_segment_plan
+from repro.optim.optimizer import align_moments, expand_moments_host
 from repro.train.state import (TrainState, init_train_state,
                                steps_completed)
 from repro.train.step import make_eval_step, make_multi_step
@@ -150,17 +166,64 @@ class Trainer:
         cfg, tcfg = self.cfg, self.tcfg
         state = self._resume(state if state is not None else self.init_state())
         spec = build_monitor_spec(state.params, lora=tcfg.lora is not None)
-        static_frozen = fully_frozen_types(jax.device_get(state.grades.frozen))
         # Kernel backend is resolved once per run (static across Tier-1
         # re-jits); per-group fused-vs-jnp selection happens inside the step.
         backend = resolve_backend(tcfg.kernels)
+        # Tier 1 / 1.5 static artifacts — all pure functions of the boundary
+        # frozen masks (resume re-derives them bit-identically):
+        use_plan = (tcfg.grades.enabled and tcfg.grades.static_repartition
+                    and supports_segment_plan(cfg))
+        # Per-row moment packing changes moment shapes, which would break the
+        # divisibility of the moment shardings derived from full param shapes
+        # — keep it to single-device runs (the whole-type placeholder still
+        # applies).  Gate on the *active mesh*, not the kernel backend: the
+        # jnp backend carries no mesh even when one is in use.
+        mesh = active_mesh()
+        pack_rows = mesh is None or mesh.devices.size <= 1
 
-        def compile_step(frozen_set):
+        def freeze_artifacts(frozen_host):
+            static = fully_frozen_types(frozen_host)
+            plan = (segment_plan(frozen_host, spec, cfg.n_layers,
+                                 tcfg.segment_max) if use_plan else None)
+            # Packing is keyed to the plan's (quantized, pure-in-the-masks)
+            # skip set, so the moment layout changes only when the plan does:
+            # the segment_max * n_types recompile bound covers repacking, and
+            # a resume re-derives the stored layout from the restored masks.
+            rows = plan_row_masks(plan, spec, frozen_host) if pack_rows \
+                else None
+            return static, plan, rows
+
+        static_frozen, plan, row_frozen = freeze_artifacts(
+            jax.device_get(state.grades.frozen))
+        trainable = trainable_mask(state.params, spec, static_frozen,
+                                   row_frozen)
+        # Checkpoints store moments in the plan-independent layout (full
+        # buffers for any live rows, whole-type placeholders — see
+        # _checkpoint_state), so a restored state packs down to whatever this
+        # run's plan/segment_max implies, with no layout provenance needed.
+        new_opt = align_moments(state.opt, state.params, tcfg, trainable)
+        if new_opt is not state.opt:
+            state = dataclasses.replace(state, opt=new_opt)
+
+        def _checkpoint_state(st):
+            """Expand row-packed moments to full buffers for the checkpoint:
+            per-row packing is a function of this run's plan (segment_max),
+            which a restart may change — on-disk layouts carry only the
+            plan-independent cases (full / placeholder), and restore re-packs
+            per the restoring run's own plan.  The expansion happens on the
+            host (numpy scatter of the device_get'd packed rows), never
+            re-materializing the full buffers in device memory."""
+            save_opt = expand_moments_host(st.opt, st.params, tcfg, trainable)
+            return (st if save_opt is st.opt
+                    else dataclasses.replace(st, opt=save_opt))
+
+        def compile_step(frozen_set, plan_, rows_):
             return jax.jit(
-                make_multi_step(cfg, tcfg, spec, frozen_set, backend=backend),
+                make_multi_step(cfg, tcfg, spec, frozen_set, backend=backend,
+                                plan=plan_, row_frozen=rows_),
                 donate_argnums=0)
 
-        step_fn = compile_step(static_frozen)
+        step_fn = compile_step(static_frozen, plan, row_frozen)
         eval_fn = jax.jit(make_eval_step(cfg, tcfg)) if val_batches else None
 
         start_step = steps_completed(state)
@@ -308,12 +371,31 @@ class Trainer:
                     if tier2:
                         stop = "all_frozen"
                         break
-                    if need_t1:
-                        now_frozen = fully_frozen_types(
+                    # Refresh the static freeze artifacts at repartition
+                    # boundaries AND before a checkpoint: the saved moment
+                    # layout must equal the pure function of the masks being
+                    # saved, so a resume re-derives it exactly.  Evaluating
+                    # the (quantized) pure function more often cannot add
+                    # recompiles — only distinct values count.
+                    if (need_t1 or need_ckpt) and tcfg.grades.enabled \
+                            and tcfg.grades.static_repartition:
+                        new_static, new_plan, new_rows = freeze_artifacts(
                             jax.device_get(state.grades.frozen))
-                        if now_frozen - static_frozen:
-                            static_frozen = frozenset(now_frozen)
-                            step_fn = compile_step(static_frozen)
+                        # row masks are a pure function of (plan, spec), so
+                        # the two comparisons below cover them too
+                        if new_static != static_frozen or new_plan != plan:
+                            old_trainable = trainable
+                            static_frozen, plan, row_frozen = (
+                                new_static, new_plan, new_rows)
+                            trainable = trainable_mask(
+                                state.params, spec, static_frozen, row_frozen)
+                            new_opt = align_moments(state.opt, state.params,
+                                                    tcfg, trainable,
+                                                    old_trainable)
+                            if new_opt is not state.opt:
+                                state = dataclasses.replace(state, opt=new_opt)
+                            step_fn = compile_step(static_frozen, plan,
+                                                   row_frozen)
                             recompiles += 1
                             compile_pending = True  # paid at the next dispatch
                     if need_val:
@@ -336,7 +418,7 @@ class Trainer:
                             stop = "val_es"
                             break
                     if need_ckpt:
-                        self.ckpt.save(s, state)
+                        self.ckpt.save(s, _checkpoint_state(state))
                     # Boundary work (eval forward passes, the checkpoint's
                     # device_get, a Tier-1 recompile) is host/aux time, not
                     # block compute: restart the completion-delta clock so the

@@ -37,19 +37,19 @@ from repro.optim.optimizer import apply_updates, global_norm, lr_at
 
 
 def _loss(params, base_params, batch, cfg: ModelConfig, tcfg: TrainConfig,
-          attn_args=None):
+          attn_args=None, plan=None):
     if tcfg.lora is not None:
         merged = merge_lora(base_params, params, tcfg.lora)
         return model.loss_fn(merged, batch, cfg, remat=tcfg.remat,
-                             attn_args=attn_args)
+                             attn_args=attn_args, plan=plan)
     return model.loss_fn(params, batch, cfg, remat=tcfg.remat,
-                         attn_args=attn_args)
+                         attn_args=attn_args, plan=plan)
 
 
 def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
                     static_frozen: AbstractSet[str] = frozenset(),
                     backend: Optional[KernelBackend] = None,
-                    param_specs=None):
+                    param_specs=None, plan=None, row_frozen=None):
     """``backend`` (resolved from ``tcfg.kernels`` when None) selects the fused
     Pallas monitor+update pipeline or the jnp reference path, per stacked group
     (DESIGN.md §3).  It is static per compiled step — the Tier-1 re-jit in the
@@ -62,6 +62,13 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
     logical-axis tree against the backend's mesh — the same resolution the
     launcher uses for state shardings.  LoRA parameter trees carry no
     logical-axis table, so sharded LoRA runs keep the jnp path per leaf.
+
+    ``plan`` (a :class:`~repro.core.partition.SegmentPlan`) segments the layer
+    scan so per-layer frozen rows stop costing dW FLOPs, and ``row_frozen``
+    (the plan-quantized masks from ``partition.plan_row_masks`` — not the raw
+    device masks, which would churn the layout per freeze) packs their
+    optimizer moments to live rows only — both static per compiled step,
+    refreshed by the trainer's Tier-1 re-jit (DESIGN.md §2).
     """
     static_frozen = frozenset(static_frozen)
     backend = resolve_backend(tcfg.kernels) if backend is None else backend
@@ -87,7 +94,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
     def grads_of(params, base_params, batch):
         def f(p):
             p = static_freeze_tree(p, spec, static_frozen)
-            return _loss(p, base_params, batch, cfg, tcfg, attn_args)
+            return _loss(p, base_params, batch, cfg, tcfg, attn_args, plan)
         (loss, metrics), grads = jax.value_and_grad(f, has_aux=True)(params)
         return loss, metrics, grads
 
@@ -120,7 +127,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
         grades, frozen = grades_update(state.grades, grads, spec, tcfg.grades,
                                        tcfg.steps, backend=backend,
                                        param_specs=pspecs)
-        trainable = trainable_mask(params, spec, static_frozen)
+        trainable = trainable_mask(params, spec, static_frozen, row_frozen)
         new_params, new_opt = apply_updates(params, grads, state.opt, tcfg,
                                             trainable=trainable, spec=spec,
                                             group_frozen=frozen,
@@ -142,7 +149,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
 def make_multi_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
                     static_frozen: AbstractSet[str] = frozenset(),
                     backend: Optional[KernelBackend] = None,
-                    param_specs=None):
+                    param_specs=None, plan=None, row_frozen=None):
     """Sync-boundary step: ``(state, block) -> (state, metrics)`` where
     ``block`` is a stacked ``(K, B, ...)`` batch pytree and every metric comes
     back as a ``(K,)`` array (one bulk ``device_get`` per block, DESIGN.md §4).
@@ -158,7 +165,8 @@ def make_multi_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
     identical scan-body HLO.
     """
     single = make_train_step(cfg, tcfg, spec, static_frozen, backend=backend,
-                             param_specs=param_specs)
+                             param_specs=param_specs, plan=plan,
+                             row_frozen=row_frozen)
     tier2 = tcfg.grades.enabled and bool(spec.groups)
 
     def multi_step(state, block):

@@ -109,6 +109,32 @@ def test_norm_delta_mode_matches_delta_for_constant_grads():
     assert float(frozen_fraction(frozen)) == 1.0
 
 
+def test_monitor_skips_frozen_rows_jnp_path():
+    """Freeze-gate parity (jnp side of the kernel gate): frozen rows report a
+    zero norm and keep their stored prev gradient bit-identical — their
+    monitor value is dead, so neither path streams them."""
+    params = make_params()
+    spec = build_monitor_spec(params)
+    cfg = GradESConfig(tau=1e-3, alpha=0.0, patience=1, monitor="delta",
+                       normalize=True)
+    st = init_grades_state(params, spec, cfg)
+    g = jax.tree.map(jnp.ones_like, params)
+    g["layers"]["wq"] = g["layers"]["wq"].at[0].set(0.0)
+    st, frozen = grades_update(st, g, spec, cfg, total_steps=4)
+    assert frozen["layers/wq"].tolist() == [True, False, False]
+    prev_frozen_row = np.asarray(st.prev[("layers", "wq")][0])
+    g2 = jax.tree.map(lambda p: jnp.full_like(p, 5.0), params)
+    st, _ = grades_update(st, g2, spec, cfg, total_steps=4)
+    # frozen row: zero reported norm, prev untouched; live rows re-monitored
+    assert float(st.last_norm["layers/wq"][0]) == 0.0
+    assert float(st.last_norm["layers/wq"][1]) > 0.0
+    np.testing.assert_array_equal(np.asarray(st.prev[("layers", "wq")][0]),
+                                  prev_frozen_row)
+    np.testing.assert_array_equal(
+        np.asarray(st.prev[("layers", "wq")][1], np.float32),
+        np.full_like(prev_frozen_row, 5.0, dtype=np.float32))
+
+
 def test_freeze_masks_broadcast_shapes():
     params = make_params()
     spec = build_monitor_spec(params)

@@ -27,6 +27,31 @@ def test_grades_norm_kernel(shape, dtype):
     assert (np.asarray(new_prev) == np.asarray(g.astype(new_prev.dtype))).all()
 
 
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_grades_norm_kernel_freeze_gate(dtype):
+    """Partially-frozen flag vector: frozen rows report a zero norm and keep
+    ``prev`` bit-identical (the write-back is skipped); live rows match the
+    ungated kernel exactly."""
+    shape = (4, 64, 256)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    g = jax.random.normal(k1, shape).astype(dtype)
+    prev = jax.random.normal(k2, shape).astype(dtype)
+    frozen = jnp.array([False, True, False, True])
+    norm, new_prev = ops.grades_norm(g, prev, frozen)
+    norm_all, prev_all = ops.grades_norm(g, prev)
+    fz = np.asarray(frozen)
+    assert (np.asarray(norm)[fz] == 0.0).all()
+    np.testing.assert_array_equal(np.asarray(new_prev)[fz],
+                                  np.asarray(prev)[fz])
+    np.testing.assert_array_equal(np.asarray(norm)[~fz],
+                                  np.asarray(norm_all)[~fz])
+    np.testing.assert_array_equal(np.asarray(new_prev)[~fz],
+                                  np.asarray(prev_all)[~fz])
+    # all-live flags are the identity w.r.t. the flagless call
+    norm_live, prev_live = ops.grades_norm(g, prev, jnp.zeros(4, bool))
+    np.testing.assert_array_equal(np.asarray(norm_live), np.asarray(norm_all))
+
+
 @pytest.mark.parametrize("shape", [(2, 5, 7, 24), (3, 2, 2, 2, 16)])
 def test_grades_norm_kernel_high_rank(shape):
     g = jax.random.normal(jax.random.PRNGKey(0), shape)

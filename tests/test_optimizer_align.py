@@ -1,0 +1,81 @@
+"""align_moments transitions (Tier 1.5): full->packed, packed->packed
+(monotone), packed->full expansion (packing disabled on restore), and
+placeholder handling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig
+from repro.optim.optimizer import (OptState, align_moments, init_opt_state,
+                                   moment_shape)
+
+L, M, N = 4, 8, 16
+
+
+def _params():
+    return {"w": jax.random.normal(jax.random.PRNGKey(0), (L, M, N)),
+            "b": jnp.zeros((M,))}
+
+
+def _mask(live):
+    m = np.zeros(L, bool)
+    m[list(live)] = True
+    return m
+
+
+def test_full_to_packed_and_monotone_repack():
+    tcfg = TrainConfig()
+    params = _params()
+    opt = init_opt_state(params, tcfg)
+    opt = OptState(count=opt.count,
+                   m=jax.tree.map(lambda z: z + 1.0, opt.m),
+                   v=jax.tree.map(lambda z: z + 2.0, opt.v))
+    t1 = {"w": _mask([0, 2, 3]), "b": True}   # layer 1 frozen
+    o1 = align_moments(opt, params, tcfg, t1)
+    assert o1.m["w"].shape == (3, M, N) == moment_shape(params["w"], t1["w"])
+    assert (np.asarray(o1.m["w"]) == 1.0).all()
+    assert o1.m["b"].shape == (M,)            # untouched leaf, same object
+    t2 = {"w": _mask([0, 3]), "b": True}      # monotone: 2 freezes too
+    o2 = align_moments(o1, params, tcfg, t2, old_trainable=t1)
+    assert o2.m["w"].shape == (2, M, N) and o2.v["w"].shape == (2, M, N)
+    # idempotent: matching layout returns the same OptState object
+    assert align_moments(o2, params, tcfg, t2, old_trainable=t2) is o2
+
+
+def test_packed_expands_to_full_when_packing_off():
+    """A row-packed checkpoint restored where packing is disabled (e.g. onto
+    a mesh): live rows keep their values, frozen rows re-init to zeros."""
+    tcfg = TrainConfig()
+    params = _params()
+    t_old = {"w": _mask([1, 2]), "b": True}
+    opt = init_opt_state(params, tcfg, t_old)
+    assert opt.m["w"].shape == (2, M, N)
+    opt = OptState(count=opt.count,
+                   m={"w": opt.m["w"] + 7.0, "b": opt.m["b"]}, v=opt.v)
+    full = align_moments(opt, params, tcfg, {"w": True, "b": True},
+                         old_trainable=t_old)
+    assert full.m["w"].shape == (L, M, N)
+    got = np.asarray(full.m["w"])
+    assert (got[[1, 2]] == 7.0).all() and (got[[0, 3]] == 0.0).all()
+
+
+def test_unknown_provenance_raises():
+    tcfg = TrainConfig()
+    params = _params()
+    bad = init_opt_state(params, tcfg, {"w": _mask([0]), "b": True})
+    with pytest.raises(ValueError, match="provenance"):
+        align_moments(bad, params, tcfg, {"w": _mask([0, 1]), "b": True})
+    # non-monotone repack WITH provenance: a clean diagnostic, not an
+    # IndexError from old_idx[pos] running past the old layout
+    with pytest.raises(ValueError, match="non-monotone"):
+        align_moments(bad, params, tcfg, {"w": _mask([0, 1]), "b": True},
+                      old_trainable={"w": _mask([0]), "b": True})
+
+
+def test_all_frozen_becomes_placeholder():
+    tcfg = TrainConfig()
+    params = _params()
+    opt = init_opt_state(params, tcfg)
+    o = align_moments(opt, params, tcfg, {"w": False, "b": True})
+    assert o.m["w"].shape == (1,) and o.v["w"].shape == (1,)

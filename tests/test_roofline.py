@@ -1,8 +1,10 @@
-"""HLO walker unit tests on hand-written HLO text with known counts."""
+"""HLO walker unit tests on hand-written HLO text with known counts, plus the
+per-layer frozen-fraction dW model (DESIGN.md §8)."""
 import pytest
 
 from repro.launch.roofline import (_shape_bytes, analyze_hlo, collective_bytes,
-                                   derive_terms)
+                                   derive_terms, grades_dw_curve,
+                                   model_flops_for)
 
 HLO = """
 HloModule test
@@ -71,3 +73,33 @@ def test_derive_terms_bottleneck():
     assert t.bottleneck in ("compute", "memory", "collective")
     assert t.step_time_s == max(t.compute_s, t.memory_s, t.collective_s)
     assert 0 <= t.roofline_frac
+
+
+def test_model_flops_frozen_dw_term():
+    """§8: a train cell's modeled FLOPs drop by exactly 2·skip·tokens — the
+    eliminated dW term — and the half-frozen point removes half the monitored
+    pool's dW (the Tier-1.5 acceptance check); serve cells are unaffected."""
+    import repro.configs as configs
+    from repro.config import SHAPES
+
+    cfg = configs.reduced("qwen3-0.6b")
+    cell = SHAPES["train_4k"]
+    tokens = cell.global_batch * cell.seq_len
+    pool = cfg.monitored_param_count()
+    base = model_flops_for(cfg, cell)
+    half = model_flops_for(cfg, cell, dw_skip_params=pool / 2)
+    full = model_flops_for(cfg, cell, dw_skip_params=pool)
+    assert half == base - 2.0 * (pool / 2) * tokens
+    assert full == base - 2.0 * pool * tokens
+    assert base > half > full > 0
+    # decode/prefill cells ignore the dW term (no backward pass)
+    dec = SHAPES["decode_32k"]
+    assert model_flops_for(cfg, dec, dw_skip_params=pool) == \
+        model_flops_for(cfg, dec)
+    curve = grades_dw_curve(cfg, cell)
+    assert [r["frozen_frac"] for r in curve] == [0.0, 0.25, 0.5, 0.75, 1.0]
+    assert curve[0]["flop_speedup"] == 1.0
+    assert curve[-1]["model_flops"] == full
+    # speedup is monotone and bounded by the all-dW-gone 6/4 = 1.5x ceiling
+    sp = [r["flop_speedup"] for r in curve]
+    assert sp == sorted(sp) and sp[-1] <= 1.5

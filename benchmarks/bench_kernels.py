@@ -346,6 +346,99 @@ def _loop_overhead_rows():
     return rows
 
 
+def _guard_overhead_rows():
+    """Numerics-guard cost (DESIGN.md §4): the all-finite sentinel is two
+    ``jnp.isfinite`` ops on scalars the step already computes (loss,
+    grad_norm) plus one extra ``(K,)`` float in the per-block metrics bundle —
+    no extra device sync, no extra HBM pass over parameters.  Measured like
+    the loop-overhead device floor: the compiled K-step block on pre-staged
+    device blocks, min estimator, guard on vs off.  Budget: ≤1% of the fused
+    block time."""
+    import dataclasses
+
+    from repro.config import GradESConfig, ModelConfig, TrainConfig
+    from repro.core.grades import build_monitor_spec
+    from repro.data.pipeline import make_batches, stack_batches
+    from repro.train.state import init_train_state
+    from repro.train.step import make_multi_step
+
+    import statistics
+
+    cfg = ModelConfig(name="bench-tiny", family="dense", n_layers=2,
+                      d_model=32, n_heads=2, n_kv_heads=2, d_ff=64, vocab=64)
+    K, n_blocks = 32, 32
+    base = TrainConfig(
+        seq_len=8, global_batch=4, steps=K * n_blocks, lr=1e-3,
+        sync_interval=K,
+        # tau=0: no freezing, every step runs the full update — the guard
+        # delta is isolated from Tier-1/Tier-2 path changes.
+        grades=GradESConfig(enabled=True, tau=0.0, alpha=0.5, normalize=True,
+                            static_repartition=False))
+    blocks = [jax.device_put(stack_batches(
+        list(make_batches(cfg, base, steps=K, start_step=i * K))))
+        for i in range(n_blocks)]
+
+    def compiled(tcfg):
+        state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+        spec = build_monitor_spec(state.params)
+        fn = jax.jit(make_multi_step(cfg, tcfg, spec), donate_argnums=0)
+        ca = fn.lower(state, blocks[0]).compile().cost_analysis()
+        if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+            ca = ca[0]
+        return state, fn, ca["flops"]
+
+    on_state, on_fn, on_flops = compiled(base)
+    off_state, off_fn, off_flops = compiled(
+        dataclasses.replace(base, numerics_guard=False))
+    for b in blocks[:2]:  # compile + warm both programs
+        on_state, m = on_fn(on_state, b)
+        jax.block_until_ready(m)
+        off_state, m = off_fn(off_state, b)
+        jax.block_until_ready(m)
+    # Same data block through both programs back-to-back (separate donated
+    # states), median of the paired per-block deltas: slow host-load drift
+    # cancels within a pair, and the median rejects scheduler outliers — a
+    # sequential A/B at this scale is pure noise.  The XLA cost-analysis
+    # FLOP delta is the deterministic modeled check alongside.
+    on_t, off_t = [], []
+    for b in blocks[2:]:
+        t0 = time.perf_counter()
+        off_state, m = off_fn(off_state, b)
+        jax.block_until_ready((off_state, m))
+        t1 = time.perf_counter()
+        on_state, m = on_fn(on_state, b)
+        jax.block_until_ready((on_state, m))
+        off_t.append(t1 - t0)
+        on_t.append(time.perf_counter() - t1)
+    deltas = [a - b for a, b in zip(on_t, off_t)]
+    off_us = statistics.median(off_t) / K * 1e6
+    delta_us = statistics.median(deltas) / K * 1e6
+    q1, _, q3 = statistics.quantiles(deltas, n=4)
+    noise_us = (q3 - q1) / 2 / K * 1e6  # half-IQR of the paired deltas
+    overhead_pct = delta_us / off_us * 100
+    noise_pct = noise_us / off_us * 100
+    modeled_pct = (on_flops - off_flops) / off_flops * 100
+    # Off-TPU the wall-clock delta is noise-bound (a ~0.0001% effect under a
+    # few-% scheduler floor), so — as with the roofline columns elsewhere in
+    # this file — the deterministic compiled-program FLOP delta is the budget
+    # check and the measurement must merely be indistinguishable from noise.
+    measured_ok = overhead_pct <= max(1.0, noise_pct)
+    return [{
+        "name": "numerics_guard/fused_block",
+        "sync_interval": K,
+        "guard_off_us_per_step": round(off_us, 2),
+        "guard_delta_us_per_step": round(delta_us, 3),
+        "overhead_pct": round(overhead_pct, 2),
+        "noise_floor_pct": round(noise_pct, 2),
+        "measured_is_noise_bound": bool(abs(overhead_pct) <= noise_pct),
+        "modeled_flops_overhead_pct": round(modeled_pct, 4),
+        "guard_on_flops": on_flops,
+        "guard_off_flops": off_flops,
+        "budget_pct": 1.0,
+        "within_budget": bool(modeled_pct <= 1.0 and measured_ok),
+    }]
+
+
 #: subprocess body for the sharded sweep: the shard-mapped fused step vs the
 #: jnp reference on a host (2 data, 4 model) mesh of 8 placeholder CPU
 #: devices (the main bench process keeps its single-device view).
@@ -505,6 +598,8 @@ def run():
     rows.extend(segment_rows)
     loop_rows = _loop_overhead_rows()
     rows.extend(loop_rows)
+    guard_rows = _guard_overhead_rows()
+    rows.extend(guard_rows)
 
     with open(out_path("kernels.json"), "w") as f:
         json.dump(rows, f, indent=1)
@@ -545,6 +640,15 @@ def run():
                           "compiled-block device floor and shrinks as the "
                           "host wakes once per K steps"),
             "loop_rows": loop_rows,
+            "guard_note": ("numerics guard on/off (DESIGN.md §4): the "
+                           "all-finite sentinel rides the existing per-block "
+                           "metrics (two isfinite ops on already-computed "
+                           "scalars + one (K,) float in the bulk transfer); "
+                           "modeled_flops_overhead_pct is the compiled-"
+                           "program FLOP delta (deterministic) and the "
+                           "paired-block wall-clock delta must stay within "
+                           "max(1%, noise floor)"),
+            "guard_rows": guard_rows,
         }, f, indent=1)
     return rows
 

@@ -29,14 +29,18 @@
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import ml_dtypes
 import numpy as np
+
+log = logging.getLogger(__name__)
 
 #: numpy can't round-trip ml_dtypes (bf16 etc.) through np.save; the manifest
 #: records the true dtype and restore re-views the raw buffer.
@@ -78,8 +82,12 @@ class CheckpointManager:
             for key, arr in host_leaves.items():
                 fname = key.replace("/", "__") + ".npy"
                 np.save(os.path.join(tmp, fname), arr)
+                # Per-leaf CRC32 over the raw payload bytes: bit rot or a
+                # torn write *after* the atomic rename is detectable at
+                # restore (verify()); the manifest itself is fsynced below.
                 manifest[key] = {"file": fname, "shape": list(arr.shape),
-                                 "dtype": str(arr.dtype)}
+                                 "dtype": str(arr.dtype),
+                                 "crc32": zlib.crc32(arr.tobytes())}
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump({"step": step, "leaves": manifest}, f)
                 f.flush()
@@ -104,14 +112,63 @@ class CheckpointManager:
     def steps(self) -> List[int]:
         out = []
         for d in os.listdir(self.dir):
-            if d.startswith("step_") and not d.endswith(".tmp"):
-                if os.path.exists(os.path.join(self.dir, d, "manifest.json")):
-                    out.append(int(d.split("_")[1]))
+            if d.startswith("step_"):
+                tail = d.split("_", 1)[1]
+                # quarantined (`step_8.corrupt`) and tmp dirs are not steps
+                if tail.isdigit() and os.path.exists(
+                        os.path.join(self.dir, d, "manifest.json")):
+                    out.append(int(tail))
         return sorted(out)
 
     def latest(self) -> Optional[int]:
         s = self.steps()
         return s[-1] if s else None
+
+    # ---------------------------------------------------- verify / self-heal
+    def verify(self, step: int) -> bool:
+        """True iff every leaf of ``step_<n>`` loads and matches its manifest
+        entry (file present, shape, dtype, CRC32 of the payload bytes).
+        Checkpoints from before CRCs existed verify on shape/dtype only."""
+        d = os.path.join(self.dir, f"step_{step}")
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)["leaves"]
+            for key, info in manifest.items():
+                arr = np.load(os.path.join(d, info["file"]))
+                if list(arr.shape) != list(info["shape"]):
+                    return False
+                if str(arr.dtype) != info["dtype"] and not (
+                        info["dtype"] in _EXTENDED_DTYPES
+                        and arr.dtype.kind == "V"):
+                    return False
+                crc = info.get("crc32")
+                if crc is not None and zlib.crc32(arr.tobytes()) != crc:
+                    return False
+        except (OSError, ValueError, KeyError, json.JSONDecodeError):
+            return False
+        return True
+
+    def quarantine(self, step: int) -> str:
+        """Move a damaged step aside as ``step_<n>.corrupt`` (kept for
+        post-mortem, invisible to ``steps()``/retention/restore)."""
+        src = os.path.join(self.dir, f"step_{step}")
+        dst = src + ".corrupt"
+        if os.path.exists(dst):
+            shutil.rmtree(dst, ignore_errors=True)
+        os.rename(src, dst)
+        log.warning("checkpoint step_%d failed verification; quarantined "
+                    "to %s", step, dst)
+        return dst
+
+    def latest_valid(self) -> Optional[int]:
+        """Newest step that passes :meth:`verify`, walking newest→oldest and
+        quarantining every corrupt/partial step passed over — the self-healing
+        restore path (DESIGN.md §4)."""
+        for step in reversed(self.steps()):
+            if self.verify(step):
+                return step
+            self.quarantine(step)
+        return None
 
     def restore(self, step: int, template, *, shardings=None):
         """Restore into ``template``'s structure; ``shardings`` (same structure,

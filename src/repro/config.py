@@ -17,6 +17,8 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, Mapping, Optional, Tuple
 
+from repro.robustness.faults import FaultPlan
+
 # ---------------------------------------------------------------------------
 # Model architecture
 # ---------------------------------------------------------------------------
@@ -273,6 +275,29 @@ class TrainConfig:
     checkpoint_every: int = 0
     keep_checkpoints: int = 3
     seed: int = 0
+    # --- robustness (DESIGN.md §4; robustness/) ---
+    # All-finite sentinel fused into the per-block metrics; on a tripped block
+    # the host rolls back to the last boundary snapshot, skips the offending
+    # block, and backs off the LR by rollback_lr_backoff (multiplicative, per
+    # rollback).  After max_rollbacks trips the run aborts with
+    # stop_reason="nonfinite_abort" (EXIT_NONFINITE).
+    numerics_guard: bool = True
+    rollback_lr_backoff: float = 0.5
+    max_rollbacks: int = 3
+    # Straggler watchdog escalation: when > 0 and the drained per-step p95
+    # exceeds this multiple of the healthy-EMA estimate, write a boundary
+    # checkpoint and abort with stop_reason="straggler_abort" (EXIT_STRAGGLER)
+    # so a supervisor can reschedule.  0 keeps today's log-only behavior.
+    straggler_p95_abort: float = 0.0
+    # Prefetcher: bounded retry with exponential backoff for transient batch-
+    # read I/O errors, and a consumer-side stall timeout (seconds; 0 = block
+    # forever) that raises PrefetchStalled instead of hanging on a wedged
+    # worker.
+    prefetch_retries: int = 3
+    prefetch_retry_backoff: float = 0.05
+    prefetch_stall_timeout: float = 0.0
+    # Deterministic fault injection (tests / chaos lane only; None in prod).
+    fault_plan: Optional[FaultPlan] = None
 
 
 # ---------------------------------------------------------------------------

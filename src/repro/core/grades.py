@@ -213,22 +213,44 @@ def grades_update(state: GradESState, grads, spec: MonitorSpec, cfg: GradESConfi
                         raw = raw / _norm_divisor(g.shape, gran)
                     norm = norm + raw
                     continue
-                norm = norm + jnp.where(live, _group_l1(
+                d = jnp.where(live, _group_l1(
                     g.astype(jnp.float32) - state.prev[p].astype(jnp.float32),
                     gran, cfg.normalize), 0.0)
-                new_prev[p] = jnp.where(broadcast_mask(frozen_now, g),
-                                        state.prev[p], g.astype(jnp.bfloat16))
+                norm = norm + d
+                # Quarantine (DESIGN.md §4): a non-finite gradient row must not
+                # contaminate the stored prev gradient, or every later Eq. 1
+                # delta on that row is NaN forever.  Since prev is finite by
+                # induction (zeros at init, only finite rows written), a
+                # non-finite per-path delta norm witnesses a non-finite g row
+                # — no extra reduction needed.  The fused kernel writes prev
+                # in-place (input_output_aliases), so this select exists only
+                # on the jnp path; fused-path contamination is covered by the
+                # numerics guard's whole-state boundary rollback.
+                keep = broadcast_mask(frozen_now | ~jnp.isfinite(d), g)
+                new_prev[p] = jnp.where(keep, state.prev[p],
+                                        g.astype(jnp.bfloat16))
             g_norm = norm
         else:
             norm = 0.0
             for p in paths:
                 norm = norm + _group_l1(get_path(grads, p), gran, cfg.normalize)
             g_norm = jnp.abs(norm - state.prev_norm[name])
-            new_pn[name] = jnp.asarray(norm, jnp.float32)
-        below_now = g_norm < cfg.tau_for(name)
-        count = jnp.where(below_now & active, state.below[name] + 1, 0)
+            # Quarantine: a non-finite norm never becomes the reference that
+            # the next step's |Δ| is measured against.
+            new_pn[name] = jnp.asarray(
+                jnp.where(jnp.isfinite(norm), norm, state.prev_norm[name]),
+                jnp.float32)
+        # Quarantine the freeze decision itself: on a non-finite monitor value
+        # the patience counter holds (no reset, no advance) and no freeze can
+        # fire — NaN comparing False against tau must never count as evidence
+        # in either direction (Algorithm 1 assumes finite statistics).
+        finite = jnp.isfinite(g_norm)
+        below_now = (g_norm < cfg.tau_for(name)) & finite
+        count = jnp.where(finite,
+                          jnp.where(below_now & active, state.below[name] + 1, 0),
+                          state.below[name])
         newly = count >= cfg.patience
-        new_frozen[name] = state.frozen[name] | (newly & active)
+        new_frozen[name] = state.frozen[name] | (newly & active & finite)
         new_below[name] = count
         new_ln[name] = jnp.asarray(g_norm, jnp.float32)
     if cfg.monitor == "delta":

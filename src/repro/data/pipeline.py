@@ -20,9 +20,11 @@ blocks: while the device crunches block *n*, the host stages block *n+1*
 """
 from __future__ import annotations
 
+import logging
 import os
 import queue
 import threading
+import time
 from dataclasses import dataclass
 from typing import Callable, Dict, Iterator, List, Optional, Sequence
 
@@ -31,6 +33,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, TrainConfig
+
+log = logging.getLogger(__name__)
+
+
+class PrefetchStalled(RuntimeError):
+    """The consumer waited longer than the stall timeout for the next block.
+
+    Raised instead of blocking forever on a wedged worker (a hung filesystem,
+    a deadlocked source).  The message carries the liveness diagnostics a
+    post-mortem needs; the worker (if any) is left running — call ``close()``
+    to tear it down."""
 
 
 @dataclass
@@ -116,16 +129,28 @@ class Prefetcher:
     source that dies mid-block yields the short remainder (every produced
     batch gets trained).  Worker exceptions re-raise on the consuming thread
     at the next ``next()``.
+
+    Robustness (DESIGN.md §4): per-batch reads retry up to ``retries`` times
+    on ``OSError`` with exponential backoff starting at ``retry_backoff``
+    seconds — transient I/O blips never surface; a persistent failure
+    re-raises the *original* exception on the consumer.  ``stall_timeout``
+    (seconds; 0 disables) bounds how long ``next()`` waits on the worker
+    before raising :class:`PrefetchStalled` instead of hanging forever.
     """
 
     def __init__(self, source: Iterator[Dict[str, np.ndarray]],
                  sizes: Sequence[int], *, depth: int = 2,
-                 place: Optional[Callable] = None):
+                 place: Optional[Callable] = None, retries: int = 3,
+                 retry_backoff: float = 0.05, stall_timeout: float = 0.0):
         self._source = iter(source)
         self._sizes = list(sizes)
         self._place = place or jax.device_put
         self._sync = depth <= 0
         self._exhausted = False
+        self._retries = max(int(retries), 0)
+        self._retry_backoff = max(float(retry_backoff), 0.0)
+        self._stall_timeout = max(float(stall_timeout), 0.0)
+        self.leaked_thread = False
         if self._sync:
             self._pos = 0
             return
@@ -136,13 +161,39 @@ class Prefetcher:
                                         name="repro-prefetch")
         self._thread.start()
 
+    def _next_batch(self) -> Dict[str, np.ndarray]:
+        """One source read under the bounded-retry policy: transient
+        ``OSError``s back off and retry; the budget exhausting re-raises the
+        last error; a source that dies *because of* the error (StopIteration
+        on the retry) re-raises the original error too — a dead reader must
+        not masquerade as clean end-of-data."""
+        err: Optional[OSError] = None
+        delay = self._retry_backoff
+        for attempt in range(self._retries + 1):
+            try:
+                return next(self._source)
+            except StopIteration:
+                if err is not None:
+                    raise err
+                raise
+            except OSError as e:
+                err = e
+                if attempt >= self._retries:
+                    raise
+                log.warning("batch read failed (%s); retry %d/%d in %.3fs",
+                            e, attempt + 1, self._retries, delay)
+                if delay > 0:
+                    time.sleep(delay)
+                delay *= 2
+        raise AssertionError("unreachable")
+
     def _build(self, size: int):
         block: List[Dict[str, np.ndarray]] = []
         for _ in range(size):
             if not self._sync and self._stop.is_set():
                 return None  # close() mid-build: stop consuming the source
             try:
-                block.append(next(self._source))
+                block.append(self._next_batch())
             except StopIteration:
                 break
         if not block:
@@ -191,7 +242,17 @@ class Prefetcher:
                 raise StopIteration
             self._pos += 1
             return block
-        item = self._q.get()
+        if self._stall_timeout > 0:
+            try:
+                item = self._q.get(timeout=self._stall_timeout)
+            except queue.Empty:
+                raise PrefetchStalled(
+                    f"no block within {self._stall_timeout:.1f}s "
+                    f"(worker alive={self._thread.is_alive()}, "
+                    f"queue depth={self._q.qsize()}, "
+                    f"pending error={self._err!r})") from None
+        else:
+            item = self._q.get()
         if item is None:
             self._exhausted = True
             self.close()
@@ -213,6 +274,14 @@ class Prefetcher:
             except queue.Empty:
                 break
         self._thread.join(timeout=5.0)
+        if self._thread.is_alive():
+            # A worker stuck in a batch read survives the join — it is a
+            # daemon thread, so it cannot hang shutdown, but the leak must be
+            # visible (it still holds the source and any mid-build blocks).
+            self.leaked_thread = True
+            log.warning("Prefetcher.close(): worker %s still alive after 5s "
+                        "join; leaking daemon thread",
+                        self._thread.name)
 
 
 class PackedFileDataset:

@@ -12,6 +12,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import sys
 
 import jax
 
@@ -19,6 +20,7 @@ import repro.configs as configs
 from repro.config import SHAPES, GradESConfig, LoRAConfig, TrainConfig
 from repro.distributed.sharding import use_mesh
 from repro.launch.mesh import make_production_mesh, rules_for
+from repro.robustness.faults import FaultPlan, exit_code_for
 from repro.train.loop import Trainer
 
 
@@ -65,6 +67,34 @@ def main():
                     help="override ModelConfig.attn_chunk_threshold (seq len "
                          "where the jnp fallback switches full -> blockwise)")
     ap.add_argument("--log", default="")
+    # --- robustness / chaos (DESIGN.md §4) ---
+    ap.add_argument("--inject-fault", action="append", default=[],
+                    metavar="KIND@STEP[:ARG]",
+                    help="deterministic fault injection (repeatable): kinds "
+                         "kill, sigterm, nan_grad, inf_grad, ckpt_corrupt, "
+                         "io_error, straggler — e.g. nan_grad@40:2.0, "
+                         "ckpt_corrupt@16:bitflip, kill@20")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed keying every fault-plan random choice (victim "
+                         "matrix / leaf / bit); same seed => same faults")
+    ap.add_argument("--numerics-guard", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="all-finite sentinel on every block + boundary "
+                         "rollback with LR backoff on a non-finite step")
+    ap.add_argument("--rollback-lr-backoff", type=float, default=0.5,
+                    help="multiplicative LR factor applied per guard rollback")
+    ap.add_argument("--max-rollbacks", type=int, default=3,
+                    help="guard trips beyond this abort the run "
+                         "(exit code 77)")
+    ap.add_argument("--straggler-abort", type=float, default=0.0,
+                    help="p95/EMA per-step ratio past which the watchdog "
+                         "checkpoints and aborts resumable (exit code 76; "
+                         "0 = log only)")
+    ap.add_argument("--prefetch-retries", type=int, default=3,
+                    help="bounded retries for transient batch-read I/O errors")
+    ap.add_argument("--prefetch-stall-timeout", type=float, default=0.0,
+                    help="seconds next() waits on the prefetch worker before "
+                         "raising PrefetchStalled (0 = wait forever)")
     args = ap.parse_args()
 
     cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
@@ -86,6 +116,14 @@ def main():
         grades=GradESConfig(enabled=args.grades, tau=args.grades_tau,
                             alpha=args.grades_alpha, normalize=True,
                             monitor=args.grades_monitor, patience=2),
+        numerics_guard=args.numerics_guard,
+        rollback_lr_backoff=args.rollback_lr_backoff,
+        max_rollbacks=args.max_rollbacks,
+        straggler_p95_abort=args.straggler_abort,
+        prefetch_retries=args.prefetch_retries,
+        prefetch_stall_timeout=args.prefetch_stall_timeout,
+        fault_plan=(FaultPlan.parse(args.inject_fault, seed=args.fault_seed)
+                    if args.inject_fault else None),
     )
     trainer = Trainer(cfg, tcfg, log_every=10, log_path=args.log or None)
 
@@ -105,7 +143,11 @@ def main():
     print(json.dumps({
         "arch": cfg.name, "stop": res.stop_reason, "steps": res.steps_run,
         "wall_s": round(res.wall_time, 2), "recompiles": res.recompiles,
+        "rollbacks": res.rollbacks,
         "final": res.history[-1] if res.history else None}, indent=1))
+    # Resumable failures get distinct exit codes (75 preempted, 76 straggler,
+    # 77 non-finite) so a supervisor can tell "relaunch me" from success.
+    sys.exit(exit_code_for(res.stop_reason))
 
 
 if __name__ == "__main__":

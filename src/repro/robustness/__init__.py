@@ -1,0 +1,18 @@
+"""Chaos-hardening toolkit: deterministic fault injection + recovery plumbing.
+
+Only :mod:`repro.robustness.faults` is re-exported here (pure data + numpy —
+importable from ``config.py`` without cycles).  The host-side actuation lives
+in :mod:`repro.robustness.harness` and is imported explicitly by the trainer.
+"""
+from repro.robustness.faults import (CORRUPT_MODES, EXIT_NONFINITE, EXIT_OK,
+                                     EXIT_PREEMPTED, EXIT_STRAGGLER,
+                                     FAULT_KINDS, FaultPlan, FaultSpec,
+                                     FaultyBatchSource, corrupt_checkpoint,
+                                     exit_code_for, tag_grad_faults)
+
+__all__ = [
+    "CORRUPT_MODES", "EXIT_NONFINITE", "EXIT_OK", "EXIT_PREEMPTED",
+    "EXIT_STRAGGLER", "FAULT_KINDS", "FaultPlan", "FaultSpec",
+    "FaultyBatchSource", "corrupt_checkpoint", "exit_code_for",
+    "tag_grad_faults",
+]

@@ -1,0 +1,243 @@
+"""Deterministic fault injection (DESIGN.md §4).
+
+A :class:`FaultPlan` is a *step-keyed schedule*: every injected fault is a pure
+function of ``(plan.seed, absolute step index)``, so a replayed run — same
+config, same plan — reproduces the identical fault sequence, and the recovery
+invariant (recovered ≡ uninterrupted, bit-for-bit, per fault class) is testable
+by literal comparison.  The plan is plain frozen data and rides inside
+``TrainConfig.fault_plan``; ``launch/train.py --inject-fault kind@step[:arg]``
+parses one.
+
+Fault classes (the injection matrix; recovery per class in DESIGN.md §4):
+
+=============  ==============================================================
+kind           effect at / around ``step``
+=============  ==============================================================
+``kill``       SIGKILL the host process right after the block containing
+               ``step`` is dispatched (work since the last checkpoint lost —
+               the crash-resume path must recover it).
+``sigterm``    SIGTERM ditto — exercises the graceful-drain handler.
+``nan_grad``   splice ``arg × NaN`` into one monitored matrix's gradient at
+               exactly ``step`` (host tags the batch with a per-step
+               ``fault_gain`` scalar; the compiled step multiplies it into the
+               target group's gradient, so injection is in-jit and replays).
+``inf_grad``   ditto with ``arg × Inf``.
+``ckpt_corrupt``  corrupt the checkpoint *written at* boundary ``step``,
+               after its atomic rename: ``arg`` ∈ {bitflip, truncate,
+               delete_leaf} (default bitflip); the leaf and bit are chosen by
+               ``(seed, step)``.
+``io_error``   the batch source raises ``OSError`` for the batch at ``step``;
+               ``arg`` = number of consecutive failing attempts (default 1 =
+               transient; set it above the retry budget for a persistent
+               fault).
+``straggler``  the block containing ``step`` completes ``arg`` seconds late
+               (default 1.0) — host-side sleep before the metric drain, which
+               is exactly where device slowness is observed.
+=============  ==============================================================
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Dict, Iterable, Iterator, Optional, Sequence, Tuple
+
+import numpy as np
+
+#: Resumable-failure exit codes (``launch/train.py`` maps stop reasons onto
+#: them so a supervisor can tell "reschedule me" from a real crash).
+EXIT_OK = 0
+EXIT_PREEMPTED = 75      # SIGTERM drain: boundary checkpoint written, resume me
+EXIT_STRAGGLER = 76      # watchdog escalation: checkpoint written, reschedule me
+EXIT_NONFINITE = 77      # numerics guard exhausted its rollback budget
+
+_STOP_EXIT_CODES = {
+    "preempted": EXIT_PREEMPTED,
+    "straggler_abort": EXIT_STRAGGLER,
+    "nonfinite_abort": EXIT_NONFINITE,
+}
+
+FAULT_KINDS = ("kill", "sigterm", "nan_grad", "inf_grad", "ckpt_corrupt",
+               "io_error", "straggler")
+CORRUPT_MODES = ("bitflip", "truncate", "delete_leaf")
+
+
+def exit_code_for(stop_reason: str) -> int:
+    """Process exit code for a TrainResult.stop_reason (0 = clean stop)."""
+    return _STOP_EXIT_CODES.get(stop_reason, EXIT_OK)
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    kind: str
+    step: int
+    arg: str = ""
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"one of {FAULT_KINDS}")
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Step-keyed deterministic fault schedule (pure in ``(seed, step)``)."""
+
+    faults: Tuple[FaultSpec, ...] = ()
+    seed: int = 0
+
+    # ------------------------------------------------------------------ parse
+    @staticmethod
+    def parse(specs: Sequence[str], seed: int = 0) -> "FaultPlan":
+        """Parse ``kind@step[:arg]`` strings (the ``--inject-fault`` format)."""
+        faults = []
+        for s in specs:
+            head, _, arg = s.partition(":")
+            kind, at, step = head.partition("@")
+            if not at:
+                raise ValueError(f"fault spec {s!r} is not kind@step[:arg]")
+            faults.append(FaultSpec(kind=kind.strip(), step=int(step),
+                                    arg=arg.strip()))
+        return FaultPlan(faults=tuple(faults), seed=seed)
+
+    def _of(self, *kinds: str) -> Tuple[FaultSpec, ...]:
+        return tuple(f for f in self.faults if f.kind in kinds)
+
+    # ------------------------------------------------- non-finite grad splice
+    @property
+    def has_grad_faults(self) -> bool:
+        return bool(self._of("nan_grad", "inf_grad"))
+
+    def grad_gain(self, step: int) -> float:
+        """Per-step gradient gain: 1.0 normally, ``scale·NaN``/``scale·Inf``
+        at an injected step.  Multiplied into ONE monitored matrix's gradient
+        inside the compiled step (``train/step.py``)."""
+        for f in self._of("nan_grad", "inf_grad"):
+            if f.step == step:
+                scale = float(f.arg) if f.arg else 1.0
+                return scale * (float("nan") if f.kind == "nan_grad"
+                                else float("inf"))
+        return 1.0
+
+    def grad_target_index(self, n_groups: int) -> int:
+        """Which monitored group the splice hits — pure in the seed."""
+        return self.seed % max(n_groups, 1)
+
+    # ------------------------------------------------------- process signals
+    def signal_in(self, start: int, end: int) -> Optional[str]:
+        """'kill' / 'sigterm' if such a fault's step falls in [start, end) —
+        the block just dispatched; fired once per process lifetime (death or
+        the drain handler makes re-fire moot)."""
+        for f in self._of("kill", "sigterm"):
+            if start <= f.step < end:
+                return f.kind
+        return None
+
+    # ----------------------------------------------------------- I/O faults
+    @property
+    def has_io_faults(self) -> bool:
+        return bool(self._of("io_error"))
+
+    def io_failures(self, step: int) -> int:
+        for f in self._of("io_error"):
+            if f.step == step:
+                return int(f.arg) if f.arg else 1
+        return 0
+
+    # ------------------------------------------------------------ straggler
+    def straggler_delay(self, start: int, size: int) -> float:
+        for f in self._of("straggler"):
+            if start <= f.step < start + size:
+                return float(f.arg) if f.arg else 1.0
+        return 0.0
+
+    # ------------------------------------------------- checkpoint corruption
+    def corrupt_mode(self, step: int) -> Optional[str]:
+        for f in self._of("ckpt_corrupt"):
+            if f.step == step:
+                mode = f.arg or "bitflip"
+                if mode not in CORRUPT_MODES:
+                    raise ValueError(f"corrupt mode {mode!r}; "
+                                     f"one of {CORRUPT_MODES}")
+                return mode
+        return None
+
+
+def corrupt_checkpoint(directory: str, step: int, mode: str = "bitflip",
+                       seed: int = 0) -> str:
+    """Deterministically damage one ``.npy`` leaf of a finished (renamed)
+    checkpoint — the leaf, byte offset and bit are all pure in ``(seed,
+    step)``.  Returns the victim file's path (or the directory for modes that
+    removed it).  This is the *injection* half; the detection half is the
+    manager's per-leaf CRC verify."""
+    d = os.path.join(directory, f"step_{step}")
+    leaves = sorted(f for f in os.listdir(d) if f.endswith(".npy"))
+    if not leaves:
+        raise FileNotFoundError(f"no .npy leaves under {d}")
+    rng = np.random.default_rng((seed, step))
+    victim = os.path.join(d, leaves[int(rng.integers(len(leaves)))])
+    if mode == "delete_leaf":
+        os.remove(victim)
+        return victim
+    size = os.path.getsize(victim)
+    if mode == "truncate":
+        with open(victim, "r+b") as f:
+            f.truncate(max(size // 2, 1))
+        return victim
+    if mode == "bitflip":
+        # flip one bit in the payload (past the ~128-byte npy header, so the
+        # array still loads and only the CRC can catch it)
+        lo = min(128, size - 1)
+        off = int(rng.integers(lo, size))
+        with open(victim, "r+b") as f:
+            f.seek(off)
+            b = f.read(1)
+            f.seek(off)
+            f.write(bytes([b[0] ^ (1 << int(rng.integers(8)))]))
+        return victim
+    raise ValueError(f"unknown corrupt mode {mode!r}")
+
+
+class FaultyBatchSource:
+    """Wraps a batch iterator with planned ``OSError`` injections.
+
+    Retry-safe by construction: the injected failure is raised *before* the
+    underlying source is advanced, so a consumer that retries ``next()`` (the
+    Prefetcher's bounded-retry path) sees the transient clear and the data
+    stream continue with no batch lost or duplicated.  Must be the OUTERMOST
+    wrapper — a generator between this and the consumer would die on the
+    first raise and turn every transient into a persistent failure."""
+
+    def __init__(self, source: Iterable, plan: FaultPlan, *,
+                 start_step: int = 0):
+        self._source = iter(source)
+        self._plan = plan
+        self._step = start_step
+        self._remaining: Dict[int, int] = {}
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        left = self._remaining.get(self._step)
+        if left is None:
+            left = self._plan.io_failures(self._step)
+        if left > 0:
+            self._remaining[self._step] = left - 1
+            raise OSError(f"injected I/O error reading batch {self._step} "
+                          f"({left - 1} more planned)")
+        batch = next(self._source)
+        self._remaining.pop(self._step, None)
+        self._step += 1
+        return batch
+
+
+def tag_grad_faults(source: Iterable, plan: FaultPlan, *,
+                    start_step: int = 0) -> Iterator:
+    """Attach the per-step ``fault_gain`` scalar to every batch (the in-jit
+    splice reads it; 1.0 when no grad fault is planned for that step)."""
+    step = start_step
+    for batch in source:
+        batch = dict(batch)
+        batch["fault_gain"] = np.float32(plan.grad_gain(step))
+        step += 1
+        yield batch

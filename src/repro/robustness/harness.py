@@ -1,0 +1,132 @@
+"""Host-side fault actuation and graceful-drain plumbing.
+
+Two pieces live here:
+
+* :class:`GracefulShutdown` — the SIGTERM half of DESIGN.md §4.  Installing it
+  turns SIGTERM into a *drain request*: the trainer finishes the in-flight
+  block, writes a boundary checkpoint synchronously, and returns with
+  ``stop_reason="preempted"`` (exit code :data:`~repro.robustness.faults.EXIT_PREEMPTED`,
+  from which a supervisor resumes bit-identically).  A second SIGTERM while
+  draining restores the previous handler, so an impatient supervisor's
+  escalation still works.
+
+* :class:`FaultActuator` — executes the host-visible faults of a
+  :class:`~repro.robustness.faults.FaultPlan` at the trainer's natural hook
+  points (dispatch / drain / checkpoint).  In-jit faults (the NaN/Inf gradient
+  splice) and data-path faults (``io_error``) are NOT actuated here — they are
+  carried by the batch stream (``tag_grad_faults`` / ``FaultyBatchSource``)
+  so that they replay exactly under resume.
+"""
+from __future__ import annotations
+
+import logging
+import os
+import signal
+import time
+from typing import Optional, Set, Tuple
+
+from repro.robustness.faults import FaultPlan, corrupt_checkpoint
+
+log = logging.getLogger(__name__)
+
+
+class GracefulShutdown:
+    """SIGTERM → "finish the block, checkpoint, exit resumable".
+
+    Usable as a context manager; also test-friendly: ``request()`` simulates
+    delivery without a real signal, and construction with ``install=False``
+    leaves process handlers untouched (the default inside ``Trainer.train``
+    only installs when running in the main thread, where signal handlers are
+    legal)."""
+
+    def __init__(self, install: bool = True):
+        self._requested = False
+        self._prev = None
+        self._installed = False
+        if install:
+            try:
+                self._prev = signal.signal(signal.SIGTERM, self._handler)
+                self._installed = True
+            except ValueError:  # not the main thread
+                pass
+
+    def _handler(self, signum, frame):
+        if self._requested and self._prev is not None:
+            # second SIGTERM while draining: stop shielding, let the previous
+            # handler (usually default-terminate) take it
+            signal.signal(signal.SIGTERM, self._prev)
+            self._prev = None
+            os.kill(os.getpid(), signal.SIGTERM)
+            return
+        log.warning("SIGTERM received: draining in-flight block, then "
+                    "writing a boundary checkpoint")
+        self._requested = True
+
+    def request(self) -> None:
+        """Simulate SIGTERM delivery (in-process tests)."""
+        self._requested = True
+
+    @property
+    def requested(self) -> bool:
+        return self._requested
+
+    def uninstall(self) -> None:
+        if self._installed and self._prev is not None:
+            signal.signal(signal.SIGTERM, self._prev)
+        self._installed = False
+        self._prev = None
+
+    def __enter__(self) -> "GracefulShutdown":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()
+
+
+class FaultActuator:
+    """Fires a plan's host-visible faults at the trainer's hook points.
+
+    Signal faults fire at most once per process (SIGKILL makes that moot;
+    for SIGTERM the drain is already in motion)."""
+
+    def __init__(self, plan: Optional[FaultPlan]):
+        self.plan = plan
+        self._fired: Set[Tuple[str, int]] = set()
+
+    def after_dispatch(self, start: int, end: int) -> None:
+        """Kill/SIGTERM once the block covering the fault step is in flight —
+        the worst moment: device work is queued but nothing is drained."""
+        if self.plan is None:
+            return
+        kind = self.plan.signal_in(start, end)
+        if kind is None or (kind, start) in self._fired:
+            return
+        self._fired.add((kind, start))
+        sig = signal.SIGKILL if kind == "kill" else signal.SIGTERM
+        log.warning("fault injection: sending %s to self (block [%d, %d))",
+                    sig.name, start, end)
+        os.kill(os.getpid(), sig)
+
+    def before_drain(self, start: int, size: int) -> None:
+        """Straggler: the block's results arrive late."""
+        if self.plan is None:
+            return
+        delay = self.plan.straggler_delay(start, size)
+        if delay > 0 and ("straggler", start) not in self._fired:
+            self._fired.add(("straggler", start))
+            log.warning("fault injection: straggling block [%d, %d) by %.3fs",
+                        start, start + size, delay)
+            time.sleep(delay)
+
+    def after_checkpoint(self, step: int, directory: Optional[str]) -> None:
+        """Corrupt a checkpoint only after its atomic rename — the failure
+        mode the CRC manifest exists to catch (rot, torn writes)."""
+        if self.plan is None or directory is None:
+            return
+        mode = self.plan.corrupt_mode(step)
+        if mode is None or ("ckpt_corrupt", step) in self._fired:
+            return
+        self._fired.add(("ckpt_corrupt", step))
+        victim = corrupt_checkpoint(directory, step, mode, self.plan.seed)
+        log.warning("fault injection: %s on checkpoint step_%d (%s)",
+                    mode, step, victim)

@@ -57,11 +57,13 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 import json
 import os
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Iterator, List, Optional, Union
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple, Union)
 
 import jax
 import numpy as np
@@ -77,6 +79,8 @@ from repro.kernels.dispatch import resolve_backend
 from repro.kernels.flash_attention import round_up
 from repro.models.model import supports_segment_plan
 from repro.optim.optimizer import align_moments, expand_moments_host
+from repro.robustness.faults import FaultyBatchSource, tag_grad_faults
+from repro.robustness.harness import FaultActuator, GracefulShutdown
 from repro.train.state import (TrainState, init_train_state,
                                steps_completed)
 from repro.train.step import make_eval_step, make_multi_step
@@ -90,6 +94,7 @@ class TrainResult:
     history: List[Dict[str, float]] = field(default_factory=list)
     stop_reason: str = "budget"
     recompiles: int = 0
+    rollbacks: int = 0
 
 
 def block_schedule(start_step: int, total_steps: int, k: int) -> List[int]:
@@ -107,6 +112,62 @@ def block_schedule(start_step: int, total_steps: int, k: int) -> List[int]:
     if total_steps - s > 0:
         sizes.append(total_steps - s)
     return sizes
+
+
+def _live_ranges(start: int, total: int,
+                 skips: Sequence[Tuple[int, int]]) -> List[Tuple[int, int]]:
+    """Sub-ranges of ``[start, total)`` minus the rollback-skipped blocks."""
+    out: List[Tuple[int, int]] = []
+    cur = start
+    for lo, hi in sorted(skips):
+        if hi <= cur:
+            continue
+        if lo >= total:
+            break
+        if lo > cur:
+            out.append((cur, lo))
+        cur = max(cur, hi)
+    if cur < total:
+        out.append((cur, total))
+    return out
+
+
+def _plan_blocks(ranges: Sequence[Tuple[int, int]], k: int
+                 ) -> List[Tuple[int, int]]:
+    """(start, size) dispatch blocks: each live range scheduled on the K-grid."""
+    out: List[Tuple[int, int]] = []
+    for lo, hi in ranges:
+        s = lo
+        for sz in block_schedule(lo, hi, k):
+            out.append((s, sz))
+            s += sz
+    return out
+
+
+class _ChainedSource:
+    """Chains per-range batch sources, tolerating exceptions from the active
+    range: unlike a generator or ``itertools.chain``, a raise (an injected or
+    real I/O error propagating up to the Prefetcher's bounded retry) does not
+    kill the chain — the retry re-pulls the same range and the stream resumes.
+    Factories are invoked lazily, one range at a time."""
+
+    def __init__(self, factories: Sequence[Callable[[], Iterator]]):
+        self._factories = list(factories)
+        self._cur: Optional[Iterator] = None
+
+    def __iter__(self) -> "_ChainedSource":
+        return self
+
+    def __next__(self):
+        while True:
+            if self._cur is None:
+                if not self._factories:
+                    raise StopIteration
+                self._cur = iter(self._factories.pop(0)())
+            try:
+                return next(self._cur)
+            except StopIteration:
+                self._cur = None
 
 
 @dataclass
@@ -139,7 +200,9 @@ class Trainer:
     def _resume(self, state: TrainState) -> TrainState:
         if self.ckpt is None:
             return state
-        latest = self.ckpt.latest()
+        # Self-healing restore: CRC-verify newest→oldest, quarantining corrupt
+        # or partial steps, and land on the newest step that checks out.
+        latest = self.ckpt.latest_valid()
         if latest is None:
             return state
         return self.ckpt.restore(latest, state)
@@ -217,10 +280,18 @@ class Trainer:
             return (st if save_opt is st.opt
                     else dataclasses.replace(st, opt=save_opt))
 
+        # Multiplicative LR backoff applied by the numerics guard: each
+        # rollback halves (by rollback_lr_backoff) the LR of the re-dispatched
+        # program.  Folded into the compiled step via a config replace, so the
+        # schedule stays a pure function of opt.count.
+        lr_scale = 1.0
+
         def compile_step(frozen_set, plan_, rows_):
+            run_tcfg = (tcfg if lr_scale == 1.0 else
+                        dataclasses.replace(tcfg, lr=tcfg.lr * lr_scale))
             return jax.jit(
-                make_multi_step(cfg, tcfg, spec, frozen_set, backend=backend,
-                                plan=plan_, row_frozen=rows_),
+                make_multi_step(cfg, run_tcfg, spec, frozen_set,
+                                backend=backend, plan=plan_, row_frozen=rows_),
                 donate_argnums=0)
 
         step_fn = compile_step(static_frozen, plan, row_frozen)
@@ -228,28 +299,68 @@ class Trainer:
 
         start_step = steps_completed(state)
         K = max(int(tcfg.sync_interval), 1)
-        sizes = block_schedule(start_step, tcfg.steps, K)
         aligned_repart = round_up(max(self.repartition_interval, 1), K)
         val_interval = max(int(tcfg.val_interval_frac * tcfg.steps), 1)
         tier2_on = tcfg.grades.enabled and bool(spec.groups)
+        placer = self._block_placer()
+        fplan = tcfg.fault_plan
+        act = FaultActuator(fplan)
+        # SIGTERM becomes a drain request: finish the in-flight block, write a
+        # boundary checkpoint synchronously, exit resumable (DESIGN.md §4).
+        shutdown = GracefulShutdown()
 
         # Data: default stream is keyed by absolute step index (resume-safe);
         # a callable lets external datasets seek too; a bare iterator is used
-        # as-is (the caller owns its resume offset).
-        if batches is None:
-            src: Iterator = make_batches(cfg, tcfg, start_step=start_step)
-        elif callable(batches):
-            src = batches(start_step)
-        else:
-            src = batches
-        blocks = Prefetcher(src, sizes, depth=tcfg.prefetch_depth,
-                            place=self._block_placer())
+        # as-is (the caller owns its resume offset).  Seekable sources can
+        # also replay from a snapshot, which is what the numerics guard's
+        # rollback needs — with a bare iterator a tripped guard aborts
+        # instead of rolling back.
+        can_replay = batches is None or callable(batches)
+        guard_on = tcfg.numerics_guard and can_replay
 
-        best_val, val_bad = float("inf"), 0
+        def build_source(ranges):
+            if batches is not None and not callable(batches):
+                it: Iterator = batches
+                if fplan is not None and fplan.has_grad_faults:
+                    it = tag_grad_faults(it, fplan, start_step=start_step)
+                if fplan is not None and fplan.has_io_faults:
+                    it = FaultyBatchSource(it, fplan, start_step=start_step)
+                return it
+
+            def factory(lo, hi):
+                def make():
+                    if batches is None:
+                        it = make_batches(cfg, tcfg, steps=hi - lo,
+                                          start_step=lo)
+                    else:
+                        it = itertools.islice(batches(lo), hi - lo)
+                    if fplan is not None and fplan.has_grad_faults:
+                        it = tag_grad_faults(it, fplan, start_step=lo)
+                    # Outermost, so an injected OSError leaves no dead
+                    # generator frame between the retrying consumer and the
+                    # fault (robustness/faults.py).
+                    if fplan is not None and fplan.has_io_faults:
+                        it = FaultyBatchSource(it, fplan, start_step=lo)
+                    return it
+                return make
+            return _ChainedSource([factory(lo, hi) for lo, hi in ranges])
+
         history: List[Dict[str, float]] = []
         last_row: Optional[Dict[str, float]] = None
         recompiles = 0
         stop = "budget"
+        rollbacks = 0
+        skips: List[Tuple[int, int]] = []
+        # Boundary snapshot for the numerics guard: the full state pulled to
+        # host RAM through the checkpoint path (plan-independent moment
+        # layout), refreshed at each sync boundary once every drained block
+        # verified finite.  Rollback = device_put it back and re-derive the
+        # freeze artifacts from its masks — the same pure functions a restart
+        # runs, so replay is bit-deterministic.
+        snapshot = (jax.device_get(_checkpoint_state(state))
+                    if guard_on else None)
+        snapshot_step = start_step
+        best_val, val_bad = float("inf"), 0
         # --- watchdog state (block-granular; see module docstring) ---
         ema_dt: Optional[float] = None
         last_done: Optional[float] = None
@@ -257,11 +368,15 @@ class Trainer:
         compile_pending = False  # next drained block pays a (re)trace/compile
         dispatched_sizes: set = set()  # block shapes already traced/compiled
         dt_window: collections.deque = collections.deque(maxlen=64)
+        tripped: Optional[Tuple[int, int]] = None  # offending (start, size)
+        straggler_hit = False
 
         def drain(inflight: _Inflight) -> bool:
             """Bulk device_get of one block's stacked metrics; returns True if
             Tier-2 (all monitored matrices frozen) was observed."""
-            nonlocal ema_dt, last_done, blocks_drained, last_row, compile_pending
+            nonlocal ema_dt, last_done, blocks_drained, last_row, \
+                compile_pending, tripped, straggler_hit
+            act.before_drain(inflight.start, inflight.size)
             m = jax.device_get(inflight.metrics)
             t_done = time.perf_counter()
             block_dt = t_done - (last_done if last_done is not None
@@ -299,6 +414,20 @@ class Trainer:
             blocks_drained += 1
             p50 = float(np.percentile(dt_window, 50)) if dt_window else per_step
             p95 = float(np.percentile(dt_window, 95)) if dt_window else per_step
+            # Numerics guard: the all-finite sentinel rides the normal metric
+            # drain, so detection lags dispatch by exactly one block — always
+            # within the boundary snapshot's replay horizon.
+            if tcfg.numerics_guard and "nonfinite" in m and \
+                    float(np.max(np.asarray(m["nonfinite"], np.float64))) > 0:
+                tripped = (inflight.start, inflight.size)
+            # Watchdog escalation (satellite of DESIGN.md §4): a p95 that blew
+            # past the healthy EMA by the configured factor means the device
+            # (or a peer) is persistently slow — checkpoint and hand the
+            # scheduling decision to the supervisor.
+            if (tcfg.straggler_p95_abort > 0 and ema_dt is not None
+                    and dt_window
+                    and p95 > tcfg.straggler_p95_abort * ema_dt):
+                straggler_hit = True
             tier2 = False
             for j in range(inflight.size):
                 if executed[j] < 1.0:
@@ -323,7 +452,31 @@ class Trainer:
         pending: Optional[_Inflight] = None
         s = start_step   # global steps covered by dispatched blocks
         try:
-            for size in sizes:
+          # Attempt loop: one pass normally; a numerics-guard trip rolls back
+          # to the boundary snapshot, skips the offending block, backs off the
+          # LR, and replays (deterministically — the data stream is
+          # step-keyed, so every surviving batch is bit-identical).
+          while True:
+            ranges = _live_ranges(snapshot_step, tcfg.steps, skips)
+            blocks_plan = _plan_blocks(ranges, K)
+            blocks = Prefetcher(build_source(ranges),
+                                [sz for _, sz in blocks_plan],
+                                depth=tcfg.prefetch_depth, place=placer,
+                                retries=tcfg.prefetch_retries,
+                                retry_backoff=tcfg.prefetch_retry_backoff,
+                                stall_timeout=tcfg.prefetch_stall_timeout)
+            pending = None
+            tripped = None
+            preempt = False
+            best_val, val_bad = float("inf"), 0
+            s = snapshot_step
+            try:
+              for bstart, size in blocks_plan:
+                if shutdown.requested or straggler_hit:
+                    # Graceful drain: stop dispatching; the pending block is
+                    # settled below, then a boundary checkpoint is written.
+                    preempt = True
+                    break
                 try:
                     block = next(blocks)
                 except StopIteration:
@@ -343,6 +496,8 @@ class Trainer:
                         tier2 = drain(pending)
                         pending = None
                         last_done = time.perf_counter()
+                        if tripped is not None:
+                            break
                         if tier2:
                             stop = "all_frozen"
                             break
@@ -350,12 +505,17 @@ class Trainer:
                     compile_pending = True
                 t_dispatch = time.perf_counter()
                 state, metrics = step_fn(state, block)
-                cur = _Inflight(start=s, size=bsize, metrics=metrics,
+                cur = _Inflight(start=bstart, size=bsize, metrics=metrics,
                                 dispatched_at=t_dispatch)
-                prev_s, s = s, s + bsize
+                prev_s, s = s, bstart + bsize
+                # Planned kill/SIGTERM faults fire with this block in flight —
+                # the worst-case moment for the recovery invariant.
+                act.after_dispatch(bstart, s)
                 # Drain the *previous* block while this one runs on device.
                 tier2 = (pending is not None and drain(pending)) or tier2
                 pending = cur
+                if tripped is not None:
+                    break
                 need_t1 = (tcfg.grades.enabled and tcfg.grades.static_repartition
                            and s % aligned_repart == 0 and s < tcfg.steps)
                 val_crossings = (s // val_interval - prev_s // val_interval
@@ -368,6 +528,8 @@ class Trainer:
                     # Sync boundary: settle the just-dispatched block too.
                     tier2 = drain(pending) or tier2
                     pending = None
+                    if tripped is not None:
+                        break
                     if tier2:
                         stop = "all_frozen"
                         break
@@ -419,6 +581,17 @@ class Trainer:
                             break
                     if need_ckpt:
                         self.ckpt.save(s, _checkpoint_state(state))
+                        if fplan is not None and \
+                                fplan.corrupt_mode(s) is not None:
+                            # Planned corruption targets the *renamed* step —
+                            # wait for the async write, then damage it.
+                            self.ckpt.wait()
+                            act.after_checkpoint(s, tcfg.checkpoint_dir)
+                    if guard_on:
+                        # Everything drained above verified finite — this
+                        # state is a safe rollback target.
+                        snapshot = jax.device_get(_checkpoint_state(state))
+                        snapshot_step = s
                     # Boundary work (eval forward passes, the checkpoint's
                     # device_get, a Tier-1 recompile) is host/aux time, not
                     # block compute: restart the completion-delta clock so the
@@ -427,12 +600,61 @@ class Trainer:
                     last_done = time.perf_counter()
                 if exhausted:
                     break
-            if pending is not None:
-                if drain(pending) and tier2_on:
-                    stop = "all_frozen"
+              # settle the trailing block (skipped when a trip already broke
+              # out: its successor consumed poisoned state and is discarded)
+              if pending is not None and tripped is None:
+                t2 = drain(pending)
                 pending = None
+                if t2 and tier2_on and tripped is None:
+                    stop = "all_frozen"
+            finally:
+                blocks.close()
+
+            # ---- adjudicate this attempt ----
+            if tripped is not None:
+                pending = None
+                if not guard_on or rollbacks >= tcfg.max_rollbacks:
+                    stop = "nonfinite_abort"
+                    break
+                rollbacks += 1
+                lr_scale *= tcfg.rollback_lr_backoff
+                skips.append((tripped[0], tripped[0] + tripped[1]))
+                row = {"step": float(tripped[0]),
+                       "rollback": float(rollbacks), "lr_scale": lr_scale}
+                history.append(row)
+                self._log(row)
+                # Restore the boundary snapshot and re-derive every static
+                # artifact from its masks (identical to a cold restart from a
+                # checkpoint of that boundary), then recompile with the
+                # backed-off LR.
+                state = jax.device_put(snapshot)
+                static_frozen, plan, row_frozen = freeze_artifacts(
+                    jax.device_get(state.grades.frozen))
+                trainable = trainable_mask(state.params, spec, static_frozen,
+                                           row_frozen)
+                new_opt = align_moments(state.opt, state.params, tcfg,
+                                        trainable)
+                if new_opt is not state.opt:
+                    state = dataclasses.replace(state, opt=new_opt)
+                step_fn = compile_step(static_frozen, plan, row_frozen)
+                recompiles += 1
+                dispatched_sizes = set()
+                compile_pending = False
+                last_done = None
+                continue
+            if stop == "budget" and (preempt or shutdown.requested
+                                     or straggler_hit):
+                # Graceful drain (SIGTERM) or straggler escalation: all
+                # dispatched work is settled and finite — write a synchronous
+                # boundary checkpoint and exit with a resumable stop reason.
+                if self.ckpt is not None:
+                    self.ckpt.save(s, _checkpoint_state(state), blocking=True)
+                stop = ("straggler_abort"
+                        if straggler_hit and not shutdown.requested
+                        else "preempted")
+            break
         finally:
-            blocks.close()
+            shutdown.uninstall()
 
         # Always record the terminal step (budget end mid-log-interval, or a
         # val-ES/Tier-2 break whose last step missed the log cadence).
@@ -447,7 +669,7 @@ class Trainer:
         return TrainResult(state=state,
                            steps_run=steps_completed(state) - start_step,
                            wall_time=wall, history=history, stop_reason=stop,
-                           recompiles=recompiles)
+                           recompiles=recompiles, rollbacks=rollbacks)
 
     def _log(self, metrics: Dict[str, float]):
         if self.log_path:

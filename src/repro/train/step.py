@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig, TrainConfig
 from repro.core.grades import (MonitorSpec, all_frozen, frozen_fraction,
-                               grades_update)
+                               get_path, grades_update, set_path)
 from repro.core.lora import merge_lora
 from repro.core.partition import static_freeze_tree, trainable_mask
 from repro.distributed.compression import compress_with_feedback
@@ -98,7 +98,26 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
         (loss, metrics), grads = jax.value_and_grad(f, has_aux=True)(params)
         return loss, metrics, grads
 
+    # Deterministic non-finite injection (robustness/faults.py): the batch
+    # stream carries a per-step ``fault_gain`` scalar (1.0 on healthy steps,
+    # NaN/Inf at planned ones) that multiplies ONE monitored group's gradient
+    # in-jit.  ×1.0 is a bitwise no-op, so a tagged-but-healthy step matches
+    # the untagged program numerically; with no plan the multiply isn't traced
+    # at all.
+    fp = tcfg.fault_plan
+    fault_target = None
+    if fp is not None and fp.has_grad_faults and spec.groups:
+        names = sorted(spec.groups)
+        fault_target = names[fp.grad_target_index(len(names))]
+
+    def splice_fault(grads, gain):
+        for p in spec.groups[fault_target][0]:
+            grads = set_path(grads, p, get_path(grads, p) * gain)
+        return grads
+
     def train_step(state, batch):
+        batch = dict(batch)
+        fault_gain = batch.pop("fault_gain", None)
         params = state.params
         if tcfg.microbatch and tcfg.microbatch < batch["tokens"].shape[0]:
             B = batch["tokens"].shape[0]
@@ -119,6 +138,9 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
         else:
             loss, metrics, grads = grads_of(params, state.base_params, batch)
 
+        if fault_target is not None and fault_gain is not None:
+            grads = splice_fault(grads, fault_gain)
+
         ef_error = state.ef_error
         if tcfg.grad_compression == "int8_ef" and ef_error is not None:
             grads, ef_error = compress_with_feedback(grads, ef_error)
@@ -138,6 +160,15 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
         metrics["frozen_frac"] = frozen_fraction(frozen)
         metrics["all_frozen"] = all_frozen(frozen)
         metrics["lr"] = jnp.asarray(lr_at(new_opt.count, tcfg), jnp.float32)
+        if tcfg.numerics_guard:
+            # All-finite sentinel (DESIGN.md §4): loss covers the forward,
+            # global_norm covers every gradient leaf (one non-finite element
+            # poisons the whole sum-of-squares), and both scalars are already
+            # computed — so the sentinel is two isfinite ops piggybacked on
+            # the existing per-block metrics, no extra device sync.  The host
+            # checks it at the normal block drain and rolls back.
+            finite = jnp.isfinite(loss) & jnp.isfinite(metrics["grad_norm"])
+            metrics["nonfinite"] = 1.0 - finite.astype(jnp.float32)
         new_state = type(state)(step=state.step + 1, params=new_params,
                                 base_params=state.base_params, opt=new_opt,
                                 grades=grades, ef_error=ef_error)

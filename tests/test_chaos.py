@@ -1,0 +1,143 @@
+"""Chaos lane (DESIGN.md §4): full-process fault injection via
+``python -m repro.launch.train --inject-fault``.
+
+Each test kills / signals a REAL training process mid-run, relaunches it, and
+asserts the recovery invariant by literal comparison: the final checkpoint of
+the recovered run is bit-identical (per-leaf CRC32) to the uninterrupted
+run's.  Fault logs land under ``artifacts/chaos/`` so CI can upload them.
+
+Marked ``slow`` + ``chaos``: CI runs these in the non-blocking chaos lane
+(``pytest -m chaos``); the in-process halves of the fault matrix are tier-1
+(``test_robustness.py``, ``test_grades_core.py``, ``test_sync_boundary.py``).
+"""
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+pytestmark = [pytest.mark.slow, pytest.mark.chaos]
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+SRC = os.path.join(ROOT, "src")
+CHAOS_DIR = os.path.join(ROOT, "artifacts", "chaos")
+
+#: one shared shape for every scenario: 24 steps, K=4 blocks, checkpoints at
+#: 8/16/24 — small enough for CPU, long enough that a mid-run fault loses work.
+BASE_ARGS = ["--arch", "qwen3-0.6b", "--reduced", "--seq", "32",
+             "--batch", "4", "--steps", "24", "--sync-interval", "4",
+             "--ckpt-every", "8"]
+
+
+def run_train(name, ckpt_dir, *extra, expect=0):
+    os.makedirs(CHAOS_DIR, exist_ok=True)
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    cmd = [sys.executable, "-m", "repro.launch.train", *BASE_ARGS,
+           "--ckpt", ckpt_dir,
+           "--log", os.path.join(CHAOS_DIR, f"{name}.jsonl"), *extra]
+    p = subprocess.run(cmd, capture_output=True, text=True, timeout=900,
+                       env=env, cwd=ROOT)
+    assert p.returncode == expect, (
+        f"{name}: rc={p.returncode} want {expect}\n{p.stdout}\n{p.stderr}")
+    return p
+
+
+def leaf_crcs(ckpt_dir, step):
+    """Per-leaf CRC32s from the manifest — leaf-for-leaf equality of two
+    manifests is bit-for-bit equality of the checkpointed states."""
+    with open(os.path.join(ckpt_dir, f"step_{step}", "manifest.json")) as f:
+        leaves = json.load(f)["leaves"]
+    return {k: (v["crc32"], tuple(v["shape"]), v["dtype"])
+            for k, v in leaves.items()}
+
+
+def assert_final_state_identical(d_fault, d_clean, what):
+    a, b = leaf_crcs(d_fault, 24), leaf_crcs(d_clean, 24)
+    assert set(a) == set(b), what
+    diff = [k for k in a if a[k] != b[k]]
+    assert not diff, f"{what}: {len(diff)} leaves differ, e.g. {diff[:5]}"
+
+
+@pytest.fixture(scope="module")
+def clean_run():
+    """The uninterrupted reference (GradES on, the default config)."""
+    d = tempfile.mkdtemp()
+    run_train("clean", d)
+    yield d
+    shutil.rmtree(d)
+
+
+@pytest.fixture(scope="module")
+def clean_run_nograde():
+    """Uninterrupted reference with GradES off — the SIGTERM drain writes an
+    off-cadence checkpoint, which with GradES on would shift the freeze-
+    artifact refresh schedule and (documentedly) break bit-comparability."""
+    d = tempfile.mkdtemp()
+    run_train("clean_nograde", d, "--no-grades")
+    yield d
+    shutil.rmtree(d)
+
+
+def test_sigkill_mid_block_resumes_bit_identical(clean_run):
+    """SIGKILL with a block in flight: no drain, no atexit — the relaunch must
+    rebuild from whatever checkpoint survived and land bit-identically."""
+    d = tempfile.mkdtemp()
+    try:
+        p = run_train("kill", d, "--inject-fault", "kill@10",
+                      expect=-signal.SIGKILL)
+        assert "stop" not in p.stdout  # died before the result summary
+        # relaunch without the fault (a replayed plan would re-fire on the
+        # replayed block — deliberately: plans are step-keyed, not once-ever)
+        run_train("kill_resume", d)
+        assert_final_state_identical(d, clean_run, "kill")
+    finally:
+        shutil.rmtree(d)
+
+
+def test_sigterm_drains_and_resumes_bit_identical(clean_run_nograde):
+    """SIGTERM mid-run: graceful drain, boundary checkpoint, exit 75; the
+    relaunch continues the step-keyed stream to a bit-identical final state."""
+    d = tempfile.mkdtemp()
+    try:
+        p = run_train("sigterm", d, "--no-grades",
+                      "--inject-fault", "sigterm@10", expect=75)
+        out = json.loads(p.stdout[p.stdout.index("{"):])
+        assert out["stop"] == "preempted"
+        assert 0 < out["steps"] < 24
+        run_train("sigterm_resume", d, "--no-grades")
+        assert_final_state_identical(d, clean_run_nograde, "sigterm")
+    finally:
+        shutil.rmtree(d)
+
+
+def test_ckpt_corruption_self_heals_on_resume(clean_run):
+    """Corrupt the newest checkpoint after its atomic rename, then crash: the
+    relaunch must quarantine it, fall back to the previous step, and still
+    finish bit-identical to the uninterrupted run."""
+    d = tempfile.mkdtemp()
+    try:
+        run_train("corrupt", d,
+                  "--inject-fault", "ckpt_corrupt@16:bitflip",
+                  "--inject-fault", "kill@18", expect=-signal.SIGKILL)
+        run_train("corrupt_resume", d)
+        assert os.path.isdir(os.path.join(d, "step_16.corrupt"))
+        assert_final_state_identical(d, clean_run, "ckpt_corrupt")
+    finally:
+        shutil.rmtree(d)
+
+
+def test_nonfinite_abort_exit_code():
+    """A NaN splice with rollbacks disabled must exit 77 (resumable-failure
+    code) — the supervisor-facing contract of the numerics guard."""
+    d = tempfile.mkdtemp()
+    try:
+        p = run_train("nonfinite", d, "--inject-fault", "nan_grad@10",
+                      "--max-rollbacks", "0", expect=77)
+        out = json.loads(p.stdout[p.stdout.index("{"):])
+        assert out["stop"] == "nonfinite_abort"
+    finally:
+        shutil.rmtree(d)

@@ -158,3 +158,71 @@ def test_tau_overrides_per_component():
     st, frozen = grades_update(st, g2, spec, cfg, total_steps=10)  # delta == 1
     assert frozen["layers/wq"].all()          # huge tau -> frozen
     assert not frozen["layers/w_up"].any()    # tiny tau -> never
+
+
+# ---------------------------------------------- non-finite quarantine (§4)
+
+def test_nonfinite_grads_never_freeze_or_update_delta_state():
+    """Numerics-guard quarantine, delta mode: a NaN/Inf gradient step must
+    leave the monitor's Eq. 1 state untouched — frozen masks, patience
+    counters, and stored prev gradients all hold their pre-fault values, so a
+    poisoned block can never cause a freeze decision (the loop rolls the
+    *weights* back; the monitor must not need rolling back)."""
+    params = make_params()
+    spec = build_monitor_spec(params)
+    cfg = GradESConfig(tau=1e9, alpha=0.0, patience=3, monitor="delta",
+                       normalize=True)  # everything sub-tau when finite
+    st = init_grades_state(params, spec, cfg)
+    g = jax.tree.map(jnp.ones_like, params)
+    st, frozen = grades_update(st, g, spec, cfg, total_steps=20)
+    below_before = {n: np.asarray(v) for n, v in st.below.items()}
+    prev_before = {p: np.asarray(v) for p, v in st.prev.items()}
+    assert all(int(v.min()) == 1 for v in below_before.values())
+    for bad in (float("nan"), float("inf"), -float("inf")):
+        g_bad = jax.tree.map(lambda p: jnp.full_like(p, bad), params)
+        st, frozen = grades_update(st, g_bad, spec, cfg, total_steps=20)
+        assert float(frozen_fraction(frozen)) == 0.0
+        for n, v in st.below.items():
+            np.testing.assert_array_equal(np.asarray(v), below_before[n], n)
+        for p, v in st.prev.items():
+            np.testing.assert_array_equal(np.asarray(v), prev_before[p],
+                                          str(p))
+
+
+def test_nonfinite_step_holds_patience_without_reset():
+    """The quarantined step neither advances nor resets the patience counter:
+    below-tau, NaN, below-tau still reaches patience=2 one finite step later
+    — non-finite steps are invisible to Eq. 1, not a strike against it."""
+    params = make_params()
+    spec = build_monitor_spec(params)
+    cfg = GradESConfig(tau=1e9, alpha=0.0, patience=2, monitor="delta",
+                       normalize=True)
+    st = init_grades_state(params, spec, cfg)
+    g = jax.tree.map(jnp.ones_like, params)
+    nan = jax.tree.map(lambda p: jnp.full_like(p, jnp.nan), params)
+    st, frozen = grades_update(st, g, spec, cfg, total_steps=20)   # count 1
+    st, frozen = grades_update(st, nan, spec, cfg, total_steps=20)  # held
+    assert float(frozen_fraction(frozen)) == 0.0
+    st, frozen = grades_update(st, g, spec, cfg, total_steps=20)   # count 2
+    assert float(frozen_fraction(frozen)) == 1.0
+
+
+def test_nonfinite_grads_hold_prev_norm_in_norm_delta_mode():
+    params = make_params()
+    spec = build_monitor_spec(params)
+    cfg = GradESConfig(tau=1e-3, alpha=0.0, patience=1, monitor="norm_delta",
+                       normalize=True)
+    st = init_grades_state(params, spec, cfg)
+    g = jax.tree.map(lambda p: jnp.full_like(p, 7.0), params)
+    st, _ = grades_update(st, g, spec, cfg, total_steps=10)
+    pn_before = {n: np.asarray(v) for n, v in st.prev_norm.items()}
+    nan = jax.tree.map(lambda p: jnp.full_like(p, jnp.nan), params)
+    st, frozen = grades_update(st, nan, spec, cfg, total_steps=10)
+    assert float(frozen_fraction(frozen)) == 0.0
+    for n, v in st.prev_norm.items():
+        np.testing.assert_array_equal(np.asarray(v), pn_before[n], n)
+    # recovery: the next finite step compares against the held norm (zero
+    # delta for the same constant gradient) and freezes as if the NaN step
+    # never happened
+    st, frozen = grades_update(st, g, spec, cfg, total_steps=10)
+    assert float(frozen_fraction(frozen)) == 1.0

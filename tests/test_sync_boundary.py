@@ -377,3 +377,33 @@ def test_watchdog_block_timings_in_history():
     last = res.history[-1]
     assert "dt" in last and "dt_p50" in last and "dt_p95" in last
     assert last["dt_p95"] >= last["dt_p50"] > 0.0
+
+
+def test_sigterm_drain_resume_bit_identical():
+    """SIGTERM mid-run becomes a graceful drain (DESIGN.md §4): the in-flight
+    block is settled, a boundary checkpoint is written synchronously, the run
+    exits with stop_reason="preempted", and a relaunch resumes to a final
+    state bit-identical to the uninterrupted run.  GradES is off here so the
+    drain checkpoint's extra boundary cannot shift the freeze-artifact
+    refresh schedule (with it on, runs are bit-comparable only when their
+    checkpoint boundaries coincide — module docstring of train/loop.py)."""
+    from repro.robustness.faults import FaultPlan
+    d = tempfile.mkdtemp()
+    try:
+        base = _tcfg(steps=24, sync_interval=4)
+        r_a = Trainer(CFG, base, log_every=8).train()  # uninterrupted
+        tcfg = dataclasses.replace(
+            base, checkpoint_dir=d,
+            fault_plan=FaultPlan.parse(["sigterm@10"]))
+        r_b = Trainer(CFG, tcfg, log_every=8).train()
+        assert r_b.stop_reason == "preempted"
+        assert 0 < r_b.steps_run < 24
+        assert r_b.steps_run % 4 == 0  # drained to a sync boundary
+        assert sorted(os.listdir(d)) == [f"step_{r_b.steps_run}"]
+        r_c = Trainer(CFG, dataclasses.replace(base, checkpoint_dir=d),
+                      log_every=8).train()
+        assert r_c.steps_run == 24 - r_b.steps_run
+        _assert_trees_equal(r_a.state.params, r_c.state.params, "params")
+        _assert_trees_equal(r_a.state.opt, r_c.state.opt, "opt")
+    finally:
+        shutil.rmtree(d)

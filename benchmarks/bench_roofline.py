@@ -71,6 +71,30 @@ def dw_curve_rows():
     return out
 
 
+def collective_curve_rows():
+    """Modeled reduce-bytes curve per assigned arch (freeze-aware explicit
+    reduce × int8-EF compression) — the collective-term analogue of
+    :func:`dw_curve_rows`; the measured counterpart is ``bench_kernels.py``'s
+    8-device reduce sweep."""
+    import repro.configs as configs
+    from repro.launch import roofline as rf
+
+    out = []
+    for arch in configs.ASSIGNED:
+        try:
+            cfg = configs.get(arch)
+        except KeyError:
+            continue
+        curve = rf.grades_collective_curve(cfg)
+        best = max(r["bytes_saving"] for r in curve
+                   if r["bytes_saving"] != float("inf"))
+        out.append({"arch": arch, "total_params": cfg.param_count(),
+                    "monitored_params": cfg.monitored_param_count(),
+                    "curve": curve,
+                    "max_bytes_saving": round(best, 4)})
+    return out
+
+
 def run():
     rows = load()
     ok = [r for r in rows if r.get("status") == "ok"]
@@ -79,6 +103,13 @@ def run():
         f.write(table + "\n")
     with open(out_path("roofline_multi.md"), "w") as f:
         f.write(markdown_table(rows, "multi") + "\n")
+    coll = collective_curve_rows()
+    with open(out_path("grades_collective_curve.json"), "w") as f:
+        json.dump({"note": ("modeled DP-reduce bytes vs frozen fraction of "
+                            "the monitored matrices x int8-EF compression "
+                            "(DESIGN.md §3); measured counterpart lives in "
+                            "BENCH_kernels.json reduce_rows"),
+                   "rows": coll}, f, indent=1)
     dw = dw_curve_rows()
     with open(out_path("grades_dw_curve.json"), "w") as f:
         json.dump({"note": ("modeled train-step FLOPs vs per-layer frozen "
@@ -95,6 +126,10 @@ def run():
                     "us_per_call": 0.0,
                     "derived": f"all-frozen FLOP speedup "
                                f"×{r['max_flop_speedup']}"} for r in dw)
+    summary.extend({"name": f"grades_collective_curve/{r['arch']}",
+                    "us_per_call": 0.0,
+                    "derived": f"best reduce-bytes saving "
+                               f"×{r['max_bytes_saving']}"} for r in coll)
     return summary
 
 

@@ -267,6 +267,14 @@ class TrainConfig:
     remat: str = "none"                  # "none" | "full" | "dots"
     fsdp: bool = True                    # shard params over the data axis too
     grad_compression: str = "none"       # "none" | "int8_ef"
+    # Freeze-aware explicit data-parallel gradient reduce (DESIGN.md §3;
+    # distributed/reduce.py).  "auto" computes grads inside a shard_map that
+    # is manual over the DP mesh axes and psums per-leaf under the boundary
+    # ReducePlan — frozen leaves/rows drop out of the collective entirely —
+    # whenever the active mesh is purely data-parallel; tensor-parallel or
+    # sharded-Pallas configs keep the implicit GSPMD reduce.  "explicit"
+    # raises instead of falling back; "implicit" never engages.
+    reduce_mode: str = "auto"            # "auto" | "explicit" | "implicit"
     # checkpointing.  NOTE: with GradES static repartition on, the Tier-1/1.5
     # freeze artifacts also refresh before each checkpoint (train/loop.py), so
     # checkpoint_every is part of the numeric schedule — runs are

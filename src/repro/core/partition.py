@@ -250,6 +250,109 @@ def plan_row_masks(plan: Optional[SegmentPlan], spec: MonitorSpec,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Freeze-aware gradient reduction: the reduce plan
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ReducePlan:
+    """Which gradient leaves (and which of their layer rows) still need the
+    data-parallel all-reduce (DESIGN.md §3).
+
+    ``entries`` maps a param path to its live layer ranges:
+
+    * path absent            — fully live: reduce the whole leaf (the default,
+      so unmonitored leaves never appear here);
+    * ``()``                 — dropped: every row's dW is eliminated
+      (``stop_gradient``), the gradient is exactly zero on every shard, and
+      skipping the collective is bit-identical to reducing zeros;
+    * ``((lo, hi), ...)``    — only axis-0 rows in the (merged, disjoint,
+      ascending) ranges are reduced; the gap rows are segment-plan-frozen and
+      pass through as exact zeros.
+
+    Hashable and comparable like :class:`SegmentPlan`; it is a pure function
+    of ``(static_frozen, plan)``, so the trainer's existing Tier-1 recompile
+    comparison covers it and the ``segment_max · n_types`` bound still holds.
+    """
+
+    entries: Tuple[Tuple[Tuple[str, ...],
+                         Tuple[Tuple[int, int], ...]], ...] = ()
+
+    @property
+    def trivial(self) -> bool:
+        """Nothing frozen: identical collectives to the full-tree reduce."""
+        return not self.entries
+
+    def lookup(self) -> Dict[Tuple[str, ...], Tuple[Tuple[int, int], ...]]:
+        return dict(self.entries)
+
+
+def _merge_ranges(ranges: List[Tuple[int, int]]) -> Tuple[Tuple[int, int], ...]:
+    out: List[Tuple[int, int]] = []
+    for lo, hi in sorted(ranges):
+        if out and out[-1][1] == lo:
+            out[-1] = (out[-1][0], hi)
+        else:
+            out.append((lo, hi))
+    return tuple(out)
+
+
+def gradient_reduce_plan(spec: MonitorSpec,
+                         static_frozen: AbstractSet[str],
+                         plan: Optional[SegmentPlan],
+                         n_layers: int) -> ReducePlan:
+    """Derive the reduce plan from the Tier-1/1.5 freeze artifacts.
+
+    Pure in ``(spec, static_frozen, plan)`` — the same boundary masks that
+    produced the segment plan produce this, so a resumed run re-derives it
+    identically and the recompile count is bounded by the plan's grid
+    quantization.  Soundness leans on exactly the mechanisms that make the dW
+    elimination itself correct: a ``static_frozen`` type's whole stacked leaf
+    is under ``stop_gradient`` (gradient exactly zero ⇒ drop), and a
+    plan-skipped segment's layer rows are under the per-segment
+    ``stop_gradient`` of the segmented scan (rows exactly zero ⇒ slice them
+    out of the psum).  Rows the wavefront froze but the quantized plan has not
+    adopted still produce (masked-at-Tier-0, nonzero) gradients, so they keep
+    their reduce until the plan catches up — conservative, like the moment
+    packing.
+    """
+    entries: List[Tuple[Tuple[str, ...], Tuple[Tuple[int, int], ...]]] = []
+    for name in sorted(spec.groups):
+        paths, _ = spec.groups[name]
+        if name in static_frozen:
+            entries.extend((p, ()) for p in sorted(paths))
+            continue
+        if plan is None or n_layers <= 0:
+            continue
+        keys = _layer_keys(spec, {name})
+        if not keys:
+            continue  # non-stacked group: no per-row dW elimination to mirror
+        live = [(lo, hi) for lo, hi, sig in plan.segments if not (keys & sig)]
+        if len(live) == len(plan.segments):
+            continue  # nothing plan-frozen: full reduce (no entry)
+        merged = _merge_ranges(live)
+        entries.extend((p, merged) for p in sorted(paths))
+    return ReducePlan(entries=tuple(sorted(entries)))
+
+
+def reduce_live_elements(tree, rplan: Optional[ReducePlan]) -> int:
+    """Element count entering the data-parallel reduce under ``rplan`` —
+    static accounting for the bench/roofline byte curves (arrays or
+    ShapeDtypeStructs; ``None``/trivial plan counts everything)."""
+    lookup = rplan.lookup() if rplan is not None else {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    total = 0
+    for kp, leaf in flat:
+        ranges = lookup.get(_key_path(kp))
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        if ranges is None:
+            total += n
+        elif len(ranges) and leaf.shape:
+            per_row = n // leaf.shape[0]
+            total += per_row * sum(hi - lo for lo, hi in ranges)
+    return total
+
+
 def plan_skipped_params(plan: Optional[SegmentPlan], layers,
                         n_layers: int) -> int:
     """Parameter count whose dW the plan's stop_gradient eliminates.

@@ -2,23 +2,48 @@
 
 On a real multi-pod fabric the data-parallel gradient reduction crosses the slow
 inter-pod links; compressing to int8 with per-matrix scales cuts those bytes 4×
-(vs fp32 accumulate).  Under pjit the collective itself is XLA's, so we model the
-compression at the math level — quantize → dequantize with an error-feedback buffer
-so the quantization error is re-injected next step (Karimireddy et al. style), which
-keeps convergence unbiased.  The dry-run's collective-bytes term quantifies the
-saving when the reduce is performed on the int8 representation.
+(vs fp32 accumulate).  The intra-run reduce is the explicit per-leaf psum of
+``distributed/reduce.py``; the inter-pod leg is modeled at the math level —
+quantize → dequantize with an error-feedback buffer so the quantization error is
+re-injected next step (Karimireddy et al. style), which keeps convergence
+unbiased.  ``launch/roofline.py::reduce_bytes_model`` quantifies the byte saving
+when the wire carries the int8 representation.
+
+Freeze-awareness: :func:`compress_with_feedback` takes the same ``trainable``
+pytree the optimizer consumes (``core/partition.py::trainable_mask``) — a
+``False`` leaf (statically frozen type) is skipped outright and keeps its
+1-element error placeholder, and a boolean row-mask leaf (Tier 1.5) compresses
+only the live rows against an error buffer packed to ``(n_live,) + trailing``
+(the moment-packing layout), so frozen rows stop paying compression math *and*
+drop their 4 bytes/param of error-buffer storage.  Skipping frozen leaves is
+bit-identical: their gradients are exactly zero and the zero-scale fast path
+below round-trips zero exactly.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    scale = jnp.max(jnp.abs(g.astype(jnp.float32))) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    """Per-tensor symmetric int8 quantization: ``q * scale ≈ g``.
+
+    Degenerate-scale guard: an all-zero tensor (a frozen leaf's gradient, or
+    the first step's empty error buffer) takes ``scale = 1.0`` instead of the
+    old ``max/127 + 1e-12`` epsilon — ``0 / 1e-12`` round-trips fine, but the
+    epsilon also biased *every* nonzero tensor's scale so the max-magnitude
+    element quantized to 126, systematically leaking mass into the
+    error-feedback buffer of near-zero (mostly-frozen) leaves.  With the exact
+    ``max/127`` scale the extrema hit ±127 and an all-zero tensor round-trips
+    to exactly zero with exactly zero error.
+    """
+    amax = jnp.max(jnp.abs(g.astype(jnp.float32)))
+    scale = jnp.where(amax > 0, amax / 127.0, jnp.float32(1.0))
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
     return q, scale
 
 
@@ -26,18 +51,86 @@ def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
 
 
-def compress_with_feedback(grads: Any, error: Any) -> Tuple[Any, Any]:
-    """Returns (compressed-then-decompressed grads, new error buffers)."""
+def _is_row_mask(t) -> bool:
+    return isinstance(t, np.ndarray)
 
-    def one(g, e):
+
+def n_compressible(grads: Any, trainable: Any = None) -> int:
+    """How many leaves :func:`compress_with_feedback` would actually compress
+    under ``trainable`` — the modulus for ``FaultPlan.comm_target_index``."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_t = (treedef.flatten_up_to(trainable) if trainable is not None
+              else [True] * len(flat_g))
+    n = 0
+    for t in flat_t:
+        if _is_row_mask(t):
+            n += int(np.asarray(t, bool).any())
+        elif t:
+            n += 1
+    return n
+
+
+def compress_with_feedback(grads: Any, error: Any, trainable: Any = None,
+                           fault_gain: Optional[jax.Array] = None,
+                           fault_index: Optional[int] = None
+                           ) -> Tuple[Any, Any]:
+    """Returns (compressed-then-decompressed grads, new error buffers).
+
+    ``trainable`` (optional; structure of ``grads``, leaves ``True`` / ``False``
+    / boolean row-mask — see module docstring) gates the per-leaf work;
+    ``None`` compresses every leaf against a full-shape buffer (legacy
+    behavior).
+
+    ``fault_gain`` / ``fault_index`` implement the ``comm_corrupt`` fault
+    (``robustness/faults.py``): the ``fault_index``-th *compressed* leaf (in
+    flatten order, counting only leaves that actually compress) has its
+    dequantize scale multiplied by ``fault_gain`` — i.e. the perturbation hits
+    the compressed representation pre-dequantize, exactly where a corrupted
+    wire transfer would.  ``×1.0`` is a bitwise no-op; a NaN gain poisons the
+    dequantized gradient *and* the new error buffer, which is why the numerics
+    guard's boundary rollback must restore error buffers too.
+    """
+
+    def one(g, e, gain):
         corrected = g.astype(jnp.float32) + e
         q, s = quantize_int8(corrected)
+        if gain is not None:
+            s = s * gain
         deq = dequantize_int8(q, s)
         return deq.astype(g.dtype), corrected - deq
 
     flat_g, treedef = jax.tree_util.tree_flatten(grads)
     flat_e = treedef.flatten_up_to(error)
-    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    flat_t = (treedef.flatten_up_to(trainable) if trainable is not None
+              else [True] * len(flat_g))
+    new_g, new_e = [], []
+    n_compressed = 0
+    for g, e, t in zip(flat_g, flat_e, flat_t):
+        if _is_row_mask(t):
+            live = np.nonzero(np.asarray(t, bool).reshape(-1))[0]
+            if live.size == 0:
+                new_g.append(g)
+                new_e.append(e)
+                continue
+            gain = (fault_gain if fault_index == n_compressed else None)
+            n_compressed += 1
+            trailing = g.shape[t.ndim:]
+            gc = g.reshape((-1,) + tuple(trailing))
+            g_live, e_live = one(gc[live], e, gain)
+            new_g.append(gc.at[live].set(g_live.astype(gc.dtype))
+                         .reshape(g.shape))
+            new_e.append(e_live)
+            continue
+        if not t:
+            # statically frozen: gradient is exactly zero, buffer is a
+            # 1-element placeholder — nothing to compress, nothing to carry
+            new_g.append(g)
+            new_e.append(e)
+            continue
+        gain = (fault_gain if fault_index == n_compressed else None)
+        n_compressed += 1
+        gq, eq = one(g, e, gain)
+        new_g.append(gq)
+        new_e.append(eq)
     unflat = jax.tree_util.tree_unflatten
-    return (unflat(treedef, [o[0] for o in outs]),
-            unflat(treedef, [o[1] for o in outs]))
+    return unflat(treedef, new_g), unflat(treedef, new_e)

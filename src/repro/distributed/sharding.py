@@ -113,6 +113,24 @@ def use_mesh(mesh: Mesh, rules: Optional[ShardingRules] = None):
         _ctx.mesh, _ctx.rules = prev
 
 
+@contextlib.contextmanager
+def suspend_mesh():
+    """Temporarily clear the logical-sharding context (thread-local).
+
+    Used at trace time around code running inside a *manual* ``shard_map``
+    body (the explicit-reduce step, ``distributed/reduce.py``): there every
+    mesh axis is already manual, and ``logical_constraint``'s
+    ``with_sharding_constraint`` would be rejected by XLA ("axis ... is also
+    found in manual_axes").  Inside the suspension the constraints degrade to
+    the same no-op they are on a single device."""
+    prev = (_ctx.mesh, _ctx.rules)
+    _ctx.mesh, _ctx.rules = None, _ctx.rules
+    try:
+        yield
+    finally:
+        _ctx.mesh, _ctx.rules = prev
+
+
 def active_mesh() -> Optional[Mesh]:
     return _ctx.mesh
 

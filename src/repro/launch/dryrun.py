@@ -114,6 +114,8 @@ def run_cell(arch: str, shape: str, mesh_name: str, out_dir: str,
         bytes_per_chip=float(bytes_per_chip), default_dynamic_trip=dyn_trip)
     rec = {"status": "ok", "lower_s": round(t_lower, 1),
            "compile_s": round(t_compile, 1),
+           **({"grades_collective_curve": rf.grades_collective_curve(cfg)}
+              if cell.kind == "train" else {}),
            "memory_analysis": {
                "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
                "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),

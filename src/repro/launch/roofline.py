@@ -362,6 +362,44 @@ def grades_dw_curve(cfg, cell, fracs=(0.0, 0.25, 0.5, 0.75, 1.0)):
     return rows
 
 
+def reduce_bytes_model(n_params: float, frozen_params: float = 0.0,
+                       compress: bool = False, dtype_bytes: float = 4.0
+                       ) -> float:
+    """Per-device bytes the data-parallel gradient reduce moves per step.
+
+    Ring all-reduce moves ~2x the payload per device (reduce-scatter +
+    all-gather legs); the freeze-aware explicit reduce (``distributed/
+    reduce.py``) removes frozen parameters from the payload outright, and
+    int8-EF compression (``distributed/compression.py``) carries 1 byte per
+    surviving element on the wire instead of ``dtype_bytes`` (per-matrix fp32
+    scales are O(leaves), negligible).  The measured counterpart is the HLO
+    collective walk over the compiled step (``benchmarks/bench_kernels.py``
+    reduce sweep)."""
+    live = max(float(n_params) - float(frozen_params), 0.0)
+    wire = 1.0 if compress else float(dtype_bytes)
+    return 2.0 * live * wire
+
+
+def grades_collective_curve(cfg, fracs=(0.0, 0.25, 0.5, 0.75, 1.0),
+                            dtype_bytes: float = 4.0):
+    """Modeled reduce-bytes curve vs frozen fraction of the monitored pool,
+    with and without int8 compression of the survivors — the collective-term
+    analogue of :func:`grades_dw_curve`.  ``bytes_saving`` is vs the
+    uncompressed full-tree reduce."""
+    pool = cfg.monitored_param_count()
+    total = cfg.param_count()
+    base = reduce_bytes_model(total, dtype_bytes=dtype_bytes)
+    rows = []
+    for f in fracs:
+        for compress in (False, True):
+            b = reduce_bytes_model(total, f * pool, compress=compress,
+                                   dtype_bytes=dtype_bytes)
+            rows.append({"frozen_frac": f, "compress": compress,
+                         "reduce_bytes": b,
+                         "bytes_saving": base / b if b else float("inf")})
+    return rows
+
+
 def top_costs(txt: str, n: int = 20, *, default_dynamic_trip: float = 1.0):
     """Heaviest instructions by trip-expanded HBM bytes (for §Perf debugging)."""
     comps, entry = _parse_computations(txt)

@@ -63,6 +63,17 @@ def main():
                     help="Tier-1.5 segment cap: max per-layer freeze segments "
                          "the layer scan splits into (bounds recompiles at "
                          "segment_max * n_types; 1 = whole-type Tier 1 only)")
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"],
+                    help="int8 error-feedback compression of the cross-pod "
+                         "gradient leg (4x bytes on surviving leaves; "
+                         "DESIGN.md §4)")
+    ap.add_argument("--reduce-mode", default="auto",
+                    choices=["auto", "explicit", "implicit"],
+                    help="freeze-aware explicit DP gradient reduce: auto = "
+                         "engage on an eligible pure-DP mesh, explicit = "
+                         "require it (error when ineligible), implicit = "
+                         "always keep the GSPMD all-reduce (DESIGN.md §3)")
     ap.add_argument("--attn-chunk-threshold", type=int, default=0,
                     help="override ModelConfig.attn_chunk_threshold (seq len "
                          "where the jnp fallback switches full -> blockwise)")
@@ -72,8 +83,9 @@ def main():
                     metavar="KIND@STEP[:ARG]",
                     help="deterministic fault injection (repeatable): kinds "
                          "kill, sigterm, nan_grad, inf_grad, ckpt_corrupt, "
-                         "io_error, straggler — e.g. nan_grad@40:2.0, "
-                         "ckpt_corrupt@16:bitflip, kill@20")
+                         "io_error, straggler, comm_corrupt — e.g. "
+                         "nan_grad@40:2.0, ckpt_corrupt@16:bitflip, kill@20, "
+                         "comm_corrupt@12 (needs --grad-compression int8_ef)")
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed keying every fault-plan random choice (victim "
                          "matrix / leaf / bit); same seed => same faults")
@@ -110,6 +122,7 @@ def main():
         optimizer=args.optimizer, remat=args.remat, kernels=args.kernels,
         sync_interval=args.sync_interval, prefetch_depth=args.prefetch_depth,
         segment_max=args.segment_max,
+        grad_compression=args.grad_compression, reduce_mode=args.reduce_mode,
         lora=LoRAConfig(rank=args.lora_rank) if args.lora_rank else None,
         val_es=args.val_es,
         checkpoint_dir=args.ckpt, checkpoint_every=args.ckpt_every,

@@ -253,6 +253,29 @@ def _packed_row_update(p, g, m, v, row_mask, flags, lr, count,
     return pn, mn, vn
 
 
+def align_packed_tree(tree, params, dtype, trainable, old_trainable=None):
+    """Re-pack any params-shaped auxiliary buffer tree (optimizer moments,
+    error-feedback buffers) to the layout ``trainable`` implies — full /
+    1-element placeholder / live-rows-packed per leaf, same transitions as
+    :func:`align_moments`.  Returns ``tree`` itself when nothing changes."""
+    flat_kp, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_p = [leaf for _, leaf in flat_kp]
+    flat_x = treedef.flatten_up_to(tree)
+    flat_t = treedef.flatten_up_to(trainable)
+    flat_t_old = (treedef.flatten_up_to(old_trainable)
+                  if old_trainable is not None else [None] * len(flat_p))
+    dt = jnp.dtype(dtype)
+    changed = False
+    new_x = []
+    for p, x, t, t_old in zip(flat_p, flat_x, flat_t, flat_t_old):
+        ex = _align_leaf(p, x, t, t_old, dt)
+        changed |= ex is not x
+        new_x.append(ex)
+    if not changed:
+        return tree
+    return jax.tree_util.tree_unflatten(treedef, new_x)
+
+
 def align_moments(opt: OptState, params, tcfg: TrainConfig, trainable,
                   old_trainable=None) -> OptState:
     """Re-pack per-row moment buffers to match ``trainable`` (Tier 1.5).
@@ -265,42 +288,27 @@ def align_moments(opt: OptState, params, tcfg: TrainConfig, trainable,
     full-buffer or whole-type-placeholder checkpoints are packed/kept as
     needed).  Returns ``opt`` itself when nothing changes.
     """
-    flat_kp, treedef = jax.tree_util.tree_flatten_with_path(params)
-    flat_p = [leaf for _, leaf in flat_kp]
-    flat_m = treedef.flatten_up_to(opt.m)
-    flat_v = treedef.flatten_up_to(opt.v)
-    flat_t = treedef.flatten_up_to(trainable)
-    flat_t_old = (treedef.flatten_up_to(old_trainable)
-                  if old_trainable is not None else [None] * len(flat_p))
     dt = jnp.dtype(tcfg.opt_state_dtype)
-    changed = False
-    new_m, new_v = [], []
-    for p, m, v, t, t_old in zip(flat_p, flat_m, flat_v, flat_t, flat_t_old):
-        em = _align_leaf(p, m, t, t_old, dt)
-        ev = v if tcfg.optimizer == "sgd" else _align_leaf(p, v, t, t_old, dt)
-        changed |= em is not m or ev is not v
-        new_m.append(em)
-        new_v.append(ev)
-    if not changed:
+    new_m = align_packed_tree(opt.m, params, dt, trainable, old_trainable)
+    new_v = (opt.v if tcfg.optimizer == "sgd"
+             else align_packed_tree(opt.v, params, dt, trainable,
+                                    old_trainable))
+    if new_m is opt.m and new_v is opt.v:
         return opt
-    unflat = jax.tree_util.tree_unflatten
-    return OptState(count=opt.count, m=unflat(treedef, new_m),
-                    v=unflat(treedef, new_v))
+    return OptState(count=opt.count, m=new_m, v=new_v)
 
 
-def expand_moments_host(opt: OptState, params, tcfg: TrainConfig,
-                        trainable) -> OptState:
-    """Host-side (numpy) expansion of row-packed moment buffers to full
-    shape, for checkpointing: packed rows are ``device_get`` and scattered
-    into host zeros, so the full-size buffers never materialize in device
-    memory (that would transiently re-spend the exact HBM the packing freed).
-    Full buffers and placeholders pass through untouched; the returned
-    OptState mixes device and numpy leaves and is only suitable for saving.
-    """
+def expand_packed_tree_host(tree, params, trainable):
+    """Host-side (numpy) expansion of a row-packed buffer tree to full shape,
+    for checkpointing: packed rows are ``device_get`` and scattered into host
+    zeros, so the full-size buffers never materialize in device memory (that
+    would transiently re-spend the exact HBM the packing freed).  Full
+    buffers and placeholders pass through untouched; the result mixes device
+    and numpy leaves and is only suitable for saving.  Returns ``tree``
+    itself when nothing changes."""
     flat_kp, treedef = jax.tree_util.tree_flatten_with_path(params)
     flat_p = [leaf for _, leaf in flat_kp]
-    flat_m = treedef.flatten_up_to(opt.m)
-    flat_v = treedef.flatten_up_to(opt.v)
+    flat_x = treedef.flatten_up_to(tree)
     flat_t = treedef.flatten_up_to(trainable)
     changed = False
 
@@ -316,14 +324,22 @@ def expand_moments_host(opt: OptState, params, tcfg: TrainConfig,
         changed = True
         return full.reshape(p.shape)
 
-    new_m = [one(p, m, t) for p, m, t in zip(flat_p, flat_m, flat_t)]
-    new_v = (flat_v if tcfg.optimizer == "sgd"
-             else [one(p, v, t) for p, v, t in zip(flat_p, flat_v, flat_t)])
+    new_x = [one(p, x, t) for p, x, t in zip(flat_p, flat_x, flat_t)]
     if not changed:
+        return tree
+    return jax.tree_util.tree_unflatten(treedef, new_x)
+
+
+def expand_moments_host(opt: OptState, params, tcfg: TrainConfig,
+                        trainable) -> OptState:
+    """Checkpoint-layout expansion of the optimizer moments (see
+    :func:`expand_packed_tree_host`)."""
+    new_m = expand_packed_tree_host(opt.m, params, trainable)
+    new_v = (opt.v if tcfg.optimizer == "sgd"
+             else expand_packed_tree_host(opt.v, params, trainable))
+    if new_m is opt.m and new_v is opt.v:
         return opt
-    unflat = jax.tree_util.tree_unflatten
-    return OptState(count=opt.count, m=unflat(treedef, new_m),
-                    v=unflat(treedef, new_v))
+    return OptState(count=opt.count, m=new_m, v=new_v)
 
 
 def _align_leaf(p, cur, t, t_old, dt):

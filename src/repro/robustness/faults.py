@@ -26,6 +26,14 @@ kind           effect at / around ``step``
                after its atomic rename: ``arg`` ∈ {bitflip, truncate,
                delete_leaf} (default bitflip); the leaf and bit are chosen by
                ``(seed, step)``.
+``comm_corrupt``  perturb ONE compressed gradient leaf *pre-dequantize* at
+               exactly ``step``: the victim leaf's int8 dequantize scale is
+               multiplied by ``arg`` (default NaN — a corrupted wire
+               transfer), poisoning the dequantized gradient and the
+               error-feedback buffer; the numerics guard must catch the
+               non-finite and the boundary rollback must restore the error
+               buffers too.  Requires ``grad_compression="int8_ef"`` (a
+               bitwise no-op otherwise); the victim leaf is pure in the seed.
 ``io_error``   the batch source raises ``OSError`` for the batch at ``step``;
                ``arg`` = number of consecutive failing attempts (default 1 =
                transient; set it above the retry budget for a persistent
@@ -57,7 +65,7 @@ _STOP_EXIT_CODES = {
 }
 
 FAULT_KINDS = ("kill", "sigterm", "nan_grad", "inf_grad", "ckpt_corrupt",
-               "io_error", "straggler")
+               "io_error", "straggler", "comm_corrupt")
 CORRUPT_MODES = ("bitflip", "truncate", "delete_leaf")
 
 
@@ -121,6 +129,27 @@ class FaultPlan:
     def grad_target_index(self, n_groups: int) -> int:
         """Which monitored group the splice hits — pure in the seed."""
         return self.seed % max(n_groups, 1)
+
+    # ------------------------------------------- compressed-reduce corruption
+    @property
+    def has_comm_faults(self) -> bool:
+        return bool(self._of("comm_corrupt"))
+
+    def comm_gain(self, step: int) -> float:
+        """Per-step dequantize-scale gain for the victim compressed leaf:
+        1.0 normally, ``arg`` (default NaN) at an injected step.  Applied by
+        ``distributed/compression.py::compress_with_feedback`` between
+        quantize and dequantize — the perturbation hits the compressed
+        representation, as a corrupted cross-pod transfer would."""
+        for f in self._of("comm_corrupt"):
+            if f.step == step:
+                return float(f.arg) if f.arg else float("nan")
+        return 1.0
+
+    def comm_target_index(self, n_leaves: int) -> int:
+        """Which compressed leaf (flatten order over the leaves that actually
+        compress) the corruption hits — pure in the seed."""
+        return self.seed % max(n_leaves, 1)
 
     # ------------------------------------------------------- process signals
     def signal_in(self, start: int, end: int) -> Optional[str]:
@@ -233,11 +262,17 @@ class FaultyBatchSource:
 
 def tag_grad_faults(source: Iterable, plan: FaultPlan, *,
                     start_step: int = 0) -> Iterator:
-    """Attach the per-step ``fault_gain`` scalar to every batch (the in-jit
-    splice reads it; 1.0 when no grad fault is planned for that step)."""
+    """Attach the per-step in-jit fault scalars to every batch: ``fault_gain``
+    (the nan/inf grad splice) and/or ``comm_gain`` (the compressed-leaf scale
+    corruption) — each 1.0 on healthy steps, and only emitted when the plan
+    schedules that fault class, so untagged programs stay untouched."""
+    grad, comm = plan.has_grad_faults, plan.has_comm_faults
     step = start_step
     for batch in source:
         batch = dict(batch)
-        batch["fault_gain"] = np.float32(plan.grad_gain(step))
+        if grad:
+            batch["fault_gain"] = np.float32(plan.grad_gain(step))
+        if comm:
+            batch["comm_gain"] = np.float32(plan.comm_gain(step))
         step += 1
         yield batch

@@ -66,19 +66,23 @@ from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple, Union)
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.config import ModelConfig, TrainConfig
 from repro.core.grades import build_monitor_spec
-from repro.core.partition import (fully_frozen_types, plan_row_masks,
-                                  segment_plan, trainable_mask)
+from repro.core.partition import (fully_frozen_types, gradient_reduce_plan,
+                                  plan_row_masks, segment_plan,
+                                  trainable_mask)
 from repro.data.pipeline import Prefetcher, make_batches
 from repro.distributed.sharding import active_mesh, active_rules
 from repro.kernels.dispatch import resolve_backend
 from repro.kernels.flash_attention import round_up
 from repro.models.model import supports_segment_plan
-from repro.optim.optimizer import align_moments, expand_moments_host
+from repro.optim.optimizer import (align_moments, align_packed_tree,
+                                   expand_moments_host,
+                                   expand_packed_tree_host)
 from repro.robustness.faults import FaultyBatchSource, tag_grad_faults
 from repro.robustness.harness import FaultActuator, GracefulShutdown
 from repro.train.state import (TrainState, init_train_state,
@@ -254,9 +258,14 @@ class Trainer:
             # a resume re-derives the stored layout from the restored masks.
             rows = plan_row_masks(plan, spec, frozen_host) if pack_rows \
                 else None
-            return static, plan, rows
+            # The ReducePlan (freeze-aware explicit DP reduce, DESIGN.md §3)
+            # is pure in (static, plan), so the recompile comparison below
+            # covers it: whenever it changes, the Tier-1 re-jit was happening
+            # anyway.
+            rplan = gradient_reduce_plan(spec, static, plan, cfg.n_layers)
+            return static, plan, rows, rplan
 
-        static_frozen, plan, row_frozen = freeze_artifacts(
+        static_frozen, plan, row_frozen, reduce_plan = freeze_artifacts(
             jax.device_get(state.grades.frozen))
         trainable = trainable_mask(state.params, spec, static_frozen,
                                    row_frozen)
@@ -268,17 +277,37 @@ class Trainer:
         if new_opt is not state.opt:
             state = dataclasses.replace(state, opt=new_opt)
 
+        def _align_ef(st, trainable_, old_trainable=None):
+            """Pack the int8-EF error buffers to the same layout the moments
+            follow (full / placeholder / live-rows) — compression skips frozen
+            leaves, so their buffers drop with them (DESIGN.md §4)."""
+            if st.ef_error is None:
+                return st
+            new_ef = align_packed_tree(st.ef_error, st.params, jnp.float32,
+                                       trainable_, old_trainable)
+            return (st if new_ef is st.ef_error
+                    else dataclasses.replace(st, ef_error=new_ef))
+
+        state = _align_ef(state, trainable)
+
         def _checkpoint_state(st):
-            """Expand row-packed moments to full buffers for the checkpoint:
-            per-row packing is a function of this run's plan (segment_max),
-            which a restart may change — on-disk layouts carry only the
-            plan-independent cases (full / placeholder), and restore re-packs
-            per the restoring run's own plan.  The expansion happens on the
-            host (numpy scatter of the device_get'd packed rows), never
-            re-materializing the full buffers in device memory."""
+            """Expand row-packed moments (and EF error buffers) to full
+            buffers for the checkpoint: per-row packing is a function of this
+            run's plan (segment_max), which a restart may change — on-disk
+            layouts carry only the plan-independent cases (full /
+            placeholder), and restore re-packs per the restoring run's own
+            plan.  The expansion happens on the host (numpy scatter of the
+            device_get'd packed rows), never re-materializing the full
+            buffers in device memory."""
             save_opt = expand_moments_host(st.opt, st.params, tcfg, trainable)
-            return (st if save_opt is st.opt
-                    else dataclasses.replace(st, opt=save_opt))
+            if save_opt is not st.opt:
+                st = dataclasses.replace(st, opt=save_opt)
+            if st.ef_error is not None:
+                save_ef = expand_packed_tree_host(st.ef_error, st.params,
+                                                  trainable)
+                if save_ef is not st.ef_error:
+                    st = dataclasses.replace(st, ef_error=save_ef)
+            return st
 
         # Multiplicative LR backoff applied by the numerics guard: each
         # rollback halves (by rollback_lr_backoff) the LR of the re-dispatched
@@ -286,15 +315,16 @@ class Trainer:
         # schedule stays a pure function of opt.count.
         lr_scale = 1.0
 
-        def compile_step(frozen_set, plan_, rows_):
+        def compile_step(frozen_set, plan_, rows_, rplan_):
             run_tcfg = (tcfg if lr_scale == 1.0 else
                         dataclasses.replace(tcfg, lr=tcfg.lr * lr_scale))
             return jax.jit(
                 make_multi_step(cfg, run_tcfg, spec, frozen_set,
-                                backend=backend, plan=plan_, row_frozen=rows_),
+                                backend=backend, plan=plan_, row_frozen=rows_,
+                                reduce_plan=rplan_),
                 donate_argnums=0)
 
-        step_fn = compile_step(static_frozen, plan, row_frozen)
+        step_fn = compile_step(static_frozen, plan, row_frozen, reduce_plan)
         eval_fn = jax.jit(make_eval_step(cfg, tcfg)) if val_batches else None
 
         start_step = steps_completed(state)
@@ -321,7 +351,8 @@ class Trainer:
         def build_source(ranges):
             if batches is not None and not callable(batches):
                 it: Iterator = batches
-                if fplan is not None and fplan.has_grad_faults:
+                if fplan is not None and (fplan.has_grad_faults
+                                          or fplan.has_comm_faults):
                     it = tag_grad_faults(it, fplan, start_step=start_step)
                 if fplan is not None and fplan.has_io_faults:
                     it = FaultyBatchSource(it, fplan, start_step=start_step)
@@ -334,7 +365,8 @@ class Trainer:
                                           start_step=lo)
                     else:
                         it = itertools.islice(batches(lo), hi - lo)
-                    if fplan is not None and fplan.has_grad_faults:
+                    if fplan is not None and (fplan.has_grad_faults
+                                              or fplan.has_comm_faults):
                         it = tag_grad_faults(it, fplan, start_step=lo)
                     # Outermost, so an injected OSError leaves no dead
                     # generator frame between the retrying consumer and the
@@ -541,14 +573,16 @@ class Trainer:
                     # recompiles — only distinct values count.
                     if (need_t1 or need_ckpt) and tcfg.grades.enabled \
                             and tcfg.grades.static_repartition:
-                        new_static, new_plan, new_rows = freeze_artifacts(
-                            jax.device_get(state.grades.frozen))
-                        # row masks are a pure function of (plan, spec), so
-                        # the two comparisons below cover them too
+                        new_static, new_plan, new_rows, new_rplan = \
+                            freeze_artifacts(
+                                jax.device_get(state.grades.frozen))
+                        # row masks and the reduce plan are pure functions of
+                        # (static, plan, spec), so the two comparisons below
+                        # cover them too
                         if new_static != static_frozen or new_plan != plan:
                             old_trainable = trainable
-                            static_frozen, plan, row_frozen = (
-                                new_static, new_plan, new_rows)
+                            static_frozen, plan, row_frozen, reduce_plan = (
+                                new_static, new_plan, new_rows, new_rplan)
                             trainable = trainable_mask(
                                 state.params, spec, static_frozen, row_frozen)
                             new_opt = align_moments(state.opt, state.params,
@@ -556,8 +590,9 @@ class Trainer:
                                                     old_trainable)
                             if new_opt is not state.opt:
                                 state = dataclasses.replace(state, opt=new_opt)
+                            state = _align_ef(state, trainable, old_trainable)
                             step_fn = compile_step(static_frozen, plan,
-                                                   row_frozen)
+                                                   row_frozen, reduce_plan)
                             recompiles += 1
                             compile_pending = True  # paid at the next dispatch
                     if need_val:
@@ -628,15 +663,17 @@ class Trainer:
                 # checkpoint of that boundary), then recompile with the
                 # backed-off LR.
                 state = jax.device_put(snapshot)
-                static_frozen, plan, row_frozen = freeze_artifacts(
-                    jax.device_get(state.grades.frozen))
+                static_frozen, plan, row_frozen, reduce_plan = \
+                    freeze_artifacts(jax.device_get(state.grades.frozen))
                 trainable = trainable_mask(state.params, spec, static_frozen,
                                            row_frozen)
                 new_opt = align_moments(state.opt, state.params, tcfg,
                                         trainable)
                 if new_opt is not state.opt:
                     state = dataclasses.replace(state, opt=new_opt)
-                step_fn = compile_step(static_frozen, plan, row_frozen)
+                state = _align_ef(state, trainable)
+                step_fn = compile_step(static_frozen, plan, row_frozen,
+                                       reduce_plan)
                 recompiles += 1
                 dispatched_sizes = set()
                 compile_pending = False

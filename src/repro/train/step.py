@@ -23,14 +23,19 @@ from typing import AbstractSet, Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
 from repro.config import ModelConfig, TrainConfig
 from repro.core.grades import (MonitorSpec, all_frozen, frozen_fraction,
                                get_path, grades_update, set_path)
 from repro.core.lora import merge_lora
 from repro.core.partition import static_freeze_tree, trainable_mask
-from repro.distributed.compression import compress_with_feedback
-from repro.distributed.sharding import (active_rules, model_axis_size,
-                                        param_partition_specs)
+from repro.distributed import (active_mesh, active_rules,
+                               compress_with_feedback, explicit_reduce_axes,
+                               n_compressible, param_partition_specs,
+                               reduce_gradients, suspend_mesh)
+from repro.distributed.sharding import mesh_axis_size, model_axis_size
 from repro.kernels.dispatch import KernelBackend, resolve_backend
 from repro.models import model
 from repro.optim.optimizer import apply_updates, global_norm, lr_at
@@ -49,7 +54,8 @@ def _loss(params, base_params, batch, cfg: ModelConfig, tcfg: TrainConfig,
 def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
                     static_frozen: AbstractSet[str] = frozenset(),
                     backend: Optional[KernelBackend] = None,
-                    param_specs=None, plan=None, row_frozen=None):
+                    param_specs=None, plan=None, row_frozen=None,
+                    reduce_plan=None):
     """``backend`` (resolved from ``tcfg.kernels`` when None) selects the fused
     Pallas monitor+update pipeline or the jnp reference path, per stacked group
     (DESIGN.md §3).  It is static per compiled step — the Tier-1 re-jit in the
@@ -69,11 +75,21 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
     device masks, which would churn the layout per freeze) packs their
     optimizer moments to live rows only — both static per compiled step,
     refreshed by the trainer's Tier-1 re-jit (DESIGN.md §2).
+
+    ``reduce_plan`` (a :class:`~repro.core.partition.ReducePlan`) drives the
+    freeze-aware explicit data-parallel reduce (DESIGN.md §3): on an eligible
+    pure-DP mesh (``distributed/reduce.py::explicit_reduce_axes``) gradients
+    are computed inside a shard_map manual over the DP axes and psum'd
+    per-leaf, with frozen leaves/rows dropped from the collective — their
+    gradients are exactly zero, so the drop is bit-identical to the full-tree
+    reduce while the bytes leave the compiled HLO.
     """
     static_frozen = frozenset(static_frozen)
     backend = resolve_backend(tcfg.kernels) if backend is None else backend
     mesh = backend.mesh
     rules = active_rules() if mesh is not None else None
+    dp_mesh = active_mesh()
+    dp_axes = explicit_reduce_axes(dp_mesh, tcfg, backend)
     _derived: Dict[str, Any] = {}
 
     def specs_for(params):
@@ -98,6 +114,61 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
         (loss, metrics), grads = jax.value_and_grad(f, has_aux=True)(params)
         return loss, metrics, grads
 
+    def local_grads(params, base_params, batch, microbatch):
+        """Grads over (this shard of) the batch, microbatch-accumulated when
+        ``microbatch`` splits it."""
+        if microbatch and microbatch < batch["tokens"].shape[0]:
+            B = batch["tokens"].shape[0]
+            mb, n = microbatch, B // microbatch
+            split = jax.tree.map(
+                lambda x: x.reshape((n, mb) + x.shape[1:]), batch)
+
+            def acc(carry, b):
+                loss, metrics, grads = grads_of(params, base_params, b)
+                g_acc, l_acc = carry
+                return ((jax.tree.map(jnp.add, g_acc, grads), l_acc + loss),
+                        metrics)
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (grads, loss), metrics = jax.lax.scan(acc, (zero, 0.0), split)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            return loss / n, jax.tree.map(lambda m: m.mean(), metrics), grads
+        return grads_of(params, base_params, batch)
+
+    if dp_axes is not None:
+        # Freeze-aware explicit DP reduce (DESIGN.md §3): grads are computed
+        # on each shard's local batch rows inside a shard_map manual over the
+        # DP axes — params/base_params replicated, batch split on dim 0 —
+        # then reduced per-leaf under the boundary ReducePlan.  pmean of
+        # shard-means == global-batch mean (equal shards); the logical
+        # sharding context is suspended inside the body because every mesh
+        # axis is already manual there.
+        ndev = mesh_axis_size(dp_mesh, dp_axes)
+        mb_local = (tcfg.microbatch // ndev
+                    if tcfg.microbatch and tcfg.microbatch % ndev == 0 else 0)
+
+        def _reduce_body(params, base_params, batch):
+            with suspend_mesh():
+                loss, metrics, grads = local_grads(params, base_params,
+                                                   batch, mb_local)
+            grads = reduce_gradients(grads, dp_axes, reduce_plan)
+            loss = jax.lax.pmean(loss, dp_axes)
+            metrics = jax.tree.map(lambda m: jax.lax.pmean(m, dp_axes),
+                                   metrics)
+            return loss, metrics, grads
+
+        _sharded = shard_map(_reduce_body, dp_mesh,
+                             in_specs=(P(), P(), P(dp_axes)),
+                             out_specs=(P(), P(), P()), check_rep=False)
+
+        def dispatch_grads(params, base_params, batch):
+            bp = base_params if base_params is not None else ()
+            return _sharded(params, bp, batch)
+    else:
+        def dispatch_grads(params, base_params, batch):
+            return local_grads(params, base_params, batch, tcfg.microbatch)
+
     # Deterministic non-finite injection (robustness/faults.py): the batch
     # stream carries a per-step ``fault_gain`` scalar (1.0 on healthy steps,
     # NaN/Inf at planned ones) that multiplies ONE monitored group's gradient
@@ -118,38 +189,29 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
     def train_step(state, batch):
         batch = dict(batch)
         fault_gain = batch.pop("fault_gain", None)
+        comm_gain = batch.pop("comm_gain", None)
         params = state.params
-        if tcfg.microbatch and tcfg.microbatch < batch["tokens"].shape[0]:
-            B = batch["tokens"].shape[0]
-            mb, n = tcfg.microbatch, B // tcfg.microbatch
-            split = jax.tree.map(
-                lambda x: x.reshape((n, mb) + x.shape[1:]), batch)
-
-            def acc(carry, b):
-                loss, metrics, grads = grads_of(params, state.base_params, b)
-                g_acc, l_acc = carry
-                return (jax.tree.map(jnp.add, g_acc, grads), l_acc + loss), metrics
-
-            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (grads, loss), metrics = jax.lax.scan(acc, (zero, 0.0), split)
-            grads = jax.tree.map(lambda g: g / n, grads)
-            loss = loss / n
-            metrics = jax.tree.map(lambda m: m.mean(), metrics)
-        else:
-            loss, metrics, grads = grads_of(params, state.base_params, batch)
+        loss, metrics, grads = dispatch_grads(params, state.base_params, batch)
 
         if fault_target is not None and fault_gain is not None:
             grads = splice_fault(grads, fault_gain)
 
+        trainable = trainable_mask(params, spec, static_frozen, row_frozen)
         ef_error = state.ef_error
         if tcfg.grad_compression == "int8_ef" and ef_error is not None:
-            grads, ef_error = compress_with_feedback(grads, ef_error)
+            fault_index = None
+            if fp is not None and comm_gain is not None:
+                fault_index = fp.comm_target_index(
+                    n_compressible(grads, trainable))
+            grads, ef_error = compress_with_feedback(
+                grads, ef_error, trainable=trainable,
+                fault_gain=comm_gain if fault_index is not None else None,
+                fault_index=fault_index)
 
         pspecs = specs_for(params)
         grades, frozen = grades_update(state.grades, grads, spec, tcfg.grades,
                                        tcfg.steps, backend=backend,
                                        param_specs=pspecs)
-        trainable = trainable_mask(params, spec, static_frozen, row_frozen)
         new_params, new_opt = apply_updates(params, grads, state.opt, tcfg,
                                             trainable=trainable, spec=spec,
                                             group_frozen=frozen,
@@ -180,7 +242,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
 def make_multi_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
                     static_frozen: AbstractSet[str] = frozenset(),
                     backend: Optional[KernelBackend] = None,
-                    param_specs=None, plan=None, row_frozen=None):
+                    param_specs=None, plan=None, row_frozen=None,
+                    reduce_plan=None):
     """Sync-boundary step: ``(state, block) -> (state, metrics)`` where
     ``block`` is a stacked ``(K, B, ...)`` batch pytree and every metric comes
     back as a ``(K,)`` array (one bulk ``device_get`` per block, DESIGN.md §4).
@@ -197,7 +260,7 @@ def make_multi_step(cfg: ModelConfig, tcfg: TrainConfig, spec: MonitorSpec,
     """
     single = make_train_step(cfg, tcfg, spec, static_frozen, backend=backend,
                              param_specs=param_specs, plan=plan,
-                             row_frozen=row_frozen)
+                             row_frozen=row_frozen, reduce_plan=reduce_plan)
     tier2 = tcfg.grades.enabled and bool(spec.groups)
 
     def multi_step(state, block):

@@ -1,0 +1,387 @@
+"""Freeze-aware gradient reduction (DESIGN.md §3) + int8-EF compression units.
+
+Fast tier-1 here: quantization edge cases, plan-aware compression layouts,
+ReducePlan derivation/purity/accounting, explicit-path eligibility, a
+single-device shard_map smoke of the sliced reduce, and the comm_corrupt
+fault → numerics guard → boundary rollback loop (error buffers restored).
+The 8-device bit-identity / convergence-parity tests run as subprocesses
+(pattern from ``test_distributed.py``) and are marked ``slow`` for CI's
+extended lane."""
+import dataclasses
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as configs
+from repro.config import GradESConfig, TrainConfig
+from repro.core.grades import _key_path, build_monitor_spec
+from repro.core.partition import (fully_frozen_types, gradient_reduce_plan,
+                                  reduce_live_elements, segment_plan)
+from repro.distributed import (compress_with_feedback, dequantize_int8,
+                               explicit_reduce_axes, n_compressible,
+                               quantize_int8, reduce_gradients,
+                               reduce_plan_bytes)
+from repro.robustness.faults import FaultPlan
+from repro.train.loop import Trainer
+from repro.train.state import init_train_state
+
+CFG = configs.reduced("qwen3-0.6b")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _tcfg(**kw):
+    base = dict(seq_len=32, global_batch=4, steps=16, lr=3e-3, sync_interval=4,
+                grades=GradESConfig(enabled=False))
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def _assert_trees_equal(a, b, what=""):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=what)
+
+
+def run_py(code: str, timeout=900):
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    p = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert p.returncode == 0, p.stdout + p.stderr
+    return p.stdout
+
+
+# ------------------------------------------------------------- quantization
+
+def test_quantize_zero_tensor_roundtrips_exactly():
+    """The degenerate-scale fast path: an all-zero tensor (frozen leaf's
+    gradient, first-step error buffer) takes scale=1.0 and round-trips to
+    exactly zero with exactly zero residual."""
+    q, s = quantize_int8(jnp.zeros((4, 8), jnp.float32))
+    assert float(s) == 1.0
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    np.testing.assert_array_equal(np.asarray(dequantize_int8(q, s)), 0.0)
+
+
+def test_quantize_extrema_hit_full_range():
+    """With the exact max/127 scale (no epsilon) the max-magnitude elements
+    quantize to ±127 — the old epsilon-biased scale left them at ±126 and
+    leaked mass into the error buffer every step."""
+    g = jnp.asarray([-2.0, -1.0, 0.25, 2.0], jnp.float32)
+    q, s = quantize_int8(g)
+    assert int(np.max(np.asarray(q))) == 127
+    assert int(np.min(np.asarray(q))) == -127
+    np.testing.assert_allclose(float(s), 2.0 / 127.0, rtol=1e-6)
+    # EF identity on a plain leaf: deq + residual == input
+    deq = dequantize_int8(q, s)
+    np.testing.assert_allclose(np.asarray(deq) + (np.asarray(g - deq)),
+                               np.asarray(g), atol=0)
+
+
+# -------------------------------------------------- plan-aware compression
+
+def test_compress_plan_aware_layouts():
+    rng = np.random.default_rng(0)
+    grads = {k: jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+             for k in ("full", "frozen", "rows")}
+    trainable = {"full": True, "frozen": False,
+                 "rows": np.array([True, True, False, False])}
+    error = {"full": jnp.zeros((4, 8), jnp.float32),
+             "frozen": jnp.zeros((1,), jnp.float32),  # whole-type placeholder
+             "rows": jnp.zeros((2, 8), jnp.float32)}  # packed to live rows
+    out, new_e = compress_with_feedback(grads, error, trainable=trainable)
+    # statically frozen leaf: grads and placeholder pass through untouched
+    assert out["frozen"] is grads["frozen"]
+    assert new_e["frozen"] is error["frozen"]
+    # row-masked leaf: only live rows compressed, frozen rows bit-untouched,
+    # error buffer stays in the (n_live,) + trailing moment-packing layout
+    assert new_e["rows"].shape == (2, 8)
+    np.testing.assert_array_equal(np.asarray(out["rows"])[2:],
+                                  np.asarray(grads["rows"])[2:])
+    q, s = quantize_int8(grads["rows"][:2])
+    np.testing.assert_array_equal(np.asarray(out["rows"])[:2],
+                                  np.asarray(dequantize_int8(q, s)))
+    # fully live leaf: error-feedback identity deq + residual == corrected
+    np.testing.assert_allclose(
+        np.asarray(out["full"]) + np.asarray(new_e["full"]),
+        np.asarray(grads["full"]), atol=1e-6)
+    # the fault-index modulus counts exactly the leaves that compress
+    assert n_compressible(grads, trainable) == 2
+    assert n_compressible(grads) == 3
+    dead = dict(trainable, rows=np.zeros(4, bool))
+    assert n_compressible(grads, dead) == 1
+    # an all-dead row mask is a passthrough, not a zero-row compress
+    out2, e2 = compress_with_feedback(grads, error, trainable=dead)
+    assert out2["rows"] is grads["rows"] and e2["rows"] is error["rows"]
+
+
+def test_compress_legacy_two_arg_full_tree():
+    g = {"a": jnp.full((3,), 0.5, jnp.float32)}
+    e = {"a": jnp.zeros((3,), jnp.float32)}
+    out, ne = compress_with_feedback(g, e)
+    np.testing.assert_allclose(np.asarray(out["a"]), 0.5, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(out["a"]) + np.asarray(ne["a"]), 0.5, atol=1e-7)
+
+
+# ------------------------------------------------------- reduce-plan algebra
+
+def _spec_state():
+    tcfg = _tcfg()
+    state = init_train_state(jax.random.PRNGKey(0), CFG, tcfg)
+    return state, build_monitor_spec(state.params), tcfg
+
+
+def test_gradient_reduce_plan_drop_slice_and_purity():
+    state, spec, tcfg = _spec_state()
+    L = CFG.n_layers
+    frozen = {n: np.zeros(L, bool) for n in spec.groups}
+    frozen["layers/wq"][0] = True   # per-layer: plan slices the live rows
+    frozen["layers/wk"][:] = True   # whole type: Tier-1 drop
+    static = fully_frozen_types(frozen)
+    plan = segment_plan(frozen, spec, L, tcfg.segment_max)
+    rp = gradient_reduce_plan(spec, static, plan, L)
+    assert dict(rp.entries) == {("layers", "wk"): (),
+                                ("layers", "wq"): ((1, 2),)}
+    assert not rp.trivial
+    assert gradient_reduce_plan(spec, frozenset(), None, L).trivial
+    # pure in (static, plan): hashable/comparable, so the trainer's Tier-1
+    # recompile comparison covers it
+    rp2 = gradient_reduce_plan(spec, static, plan, L)
+    assert rp == rp2 and hash(rp) == hash(rp2) and {rp: 1}[rp2] == 1
+    # byte accounting: the dropped leaf and the frozen layer row leave the
+    # reduce entirely
+    params = state.params
+    full = reduce_live_elements(params, None)
+    live = reduce_live_elements(params, rp)
+    wk = params["layers"]["wk"]
+    wq = params["layers"]["wq"]
+    assert full - live == wk.size + wq.size // L
+    assert reduce_plan_bytes(params, rp) == live * 4
+    assert reduce_plan_bytes(params, rp, bytes_per_elem=1) == live
+
+
+def test_explicit_reduce_axes_eligibility():
+    tcfg = _tcfg()
+    assert explicit_reduce_axes(None, tcfg) is None
+    mesh1 = jax.make_mesh((1,), ("data",))
+    assert explicit_reduce_axes(mesh1, tcfg) is None
+    assert explicit_reduce_axes(
+        mesh1, dataclasses.replace(tcfg, reduce_mode="implicit")) is None
+    with pytest.raises(ValueError, match="explicit"):
+        explicit_reduce_axes(
+            mesh1, dataclasses.replace(tcfg, reduce_mode="explicit"))
+    bogus = types.SimpleNamespace(reduce_mode="warp", global_batch=4)
+    with pytest.raises(ValueError, match="reduce_mode"):
+        explicit_reduce_axes(None, bogus)
+
+
+def test_reduce_gradients_plan_matches_full_on_unit_mesh():
+    """The slicing/scatter logic in-process: on a 1-device DP mesh pmean is
+    the identity, so the planned reduce must return its input bit-for-bit
+    (frozen rows are zero, as the segmented scan guarantees) and match the
+    plan-less full-tree reduce."""
+    state, spec, tcfg = _spec_state()
+    L = CFG.n_layers
+    frozen = {n: np.zeros(L, bool) for n in spec.groups}
+    frozen["layers/wq"][0] = True
+    frozen["layers/wk"][:] = True
+    static = fully_frozen_types(frozen)
+    plan = segment_plan(frozen, spec, L, tcfg.segment_max)
+    rp = gradient_reduce_plan(spec, static, plan, L)
+
+    rng = np.random.default_rng(1)
+    lookup = rp.lookup()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state.params)
+    leaves = []
+    for kp, p in flat:
+        g = np.asarray(rng.normal(size=p.shape), np.float32)
+        ranges = lookup.get(_key_path(kp))
+        if ranges is not None:   # zero the frozen leaf / gap rows, as upstream
+            live = np.zeros(p.shape[0], bool)
+            for lo, hi in ranges:
+                live[lo:hi] = True
+            g[~live] = 0.0
+        leaves.append(jnp.asarray(g))
+    grads = jax.tree_util.tree_unflatten(treedef, leaves)
+
+    mesh = jax.make_mesh((1,), ("data",))
+
+    def run(rplan):
+        fn = shard_map(lambda g: reduce_gradients(g, ("data",), rplan),
+                       mesh, in_specs=(P(),), out_specs=P(), check_rep=False)
+        return jax.jit(fn)(grads)
+
+    _assert_trees_equal(run(rp), grads, "planned reduce == identity")
+    _assert_trees_equal(run(rp), run(None), "planned == full-tree")
+
+
+# ------------------------------------------- comm_corrupt fault -> rollback
+
+def test_comm_corrupt_trips_guard_and_rolls_back():
+    """A corrupted compressed transfer at step 6 NaNs both the dequantized
+    gradients and the new error buffer; the numerics guard must catch it at
+    the block boundary and the rollback must restore the error buffers too —
+    a params-only rollback would re-poison every subsequent block and abort
+    after max_rollbacks instead of finishing on budget."""
+    tcfg = _tcfg(grad_compression="int8_ef",
+                 fault_plan=FaultPlan.parse(["comm_corrupt@6"]))
+    r = Trainer(CFG, tcfg, log_every=4).train()
+    assert r.stop_reason == "budget"
+    assert r.rollbacks == 1
+    assert r.steps_run == tcfg.steps - tcfg.sync_interval
+    rb = [h for h in r.history if h.get("rollback")]
+    assert len(rb) == 1 and rb[0]["step"] == 4.0
+    assert rb[0]["lr_scale"] == tcfg.rollback_lr_backoff
+    assert r.state.ef_error is not None
+    for leaf in jax.tree.leaves(r.state.ef_error):
+        assert np.isfinite(np.asarray(leaf)).all()
+    # deterministic replay: an identical run lands bit-for-bit, EF included
+    r2 = Trainer(CFG, tcfg, log_every=4).train()
+    _assert_trees_equal(r.state.params, r2.state.params, "params")
+    _assert_trees_equal(r.state.ef_error, r2.state.ef_error, "ef_error")
+
+
+def test_comm_corrupt_healthy_prefix_matches_clean_run():
+    """Off-step the comm fault is a ×1.0 scale multiply — a bitwise no-op —
+    so the pre-fault blocks must match a fault-free compressed run."""
+    clean = Trainer(CFG, _tcfg(grad_compression="int8_ef"),
+                    log_every=4).train()
+    faulted = Trainer(CFG, _tcfg(grad_compression="int8_ef",
+                                 fault_plan=FaultPlan.parse(
+                                     ["comm_corrupt@6"])),
+                      log_every=4).train()
+    lc = {h["step"]: h["loss"] for h in clean.history if "loss" in h}
+    for h in faulted.history:
+        if "loss" in h and h["step"] <= 4.0:
+            assert h["loss"] == lc[h["step"]], h["step"]
+
+
+# -------------------------------------------------- 8-device slow lane
+
+@pytest.mark.slow
+def test_reduce_plan_bit_identical_across_freeze_wavefront():
+    """Acceptance: on an 8-way pure-DP mesh the planned explicit reduce is
+    bit-identical to the full-tree explicit reduce at every stage of a
+    scripted freeze wavefront — none frozen, a per-layer row slice, then a
+    whole-type Tier-1 drop (a genuine re-jit of the step)."""
+    run_py("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+import repro.configs as configs
+from repro.config import GradESConfig, TrainConfig
+from repro.core.grades import build_monitor_spec
+from repro.core.partition import (fully_frozen_types, gradient_reduce_plan,
+                                  segment_plan)
+from repro.data.pipeline import make_batches
+from repro.distributed.sharding import use_mesh, DEFAULT_RULES
+from repro.train.state import init_train_state
+from repro.train.step import make_train_step
+
+cfg = configs.reduced("qwen3-0.6b")
+tcfg = TrainConfig(seq_len=32, global_batch=8, steps=8, lr=1e-3,
+                   reduce_mode="explicit",  # raise loudly if ineligible
+                   grades=GradESConfig(enabled=False))
+L = cfg.n_layers
+batches = list(make_batches(cfg, tcfg, steps=6))
+mesh = jax.make_mesh((8,), ("data",))
+
+state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+spec = build_monitor_spec(state.params)
+
+def masks(stage):
+    frozen = {n: np.zeros(L, bool) for n in spec.groups}
+    if stage >= 1:
+        frozen["layers/wq"][0] = True      # Tier 1.5: row slice
+    if stage >= 2:
+        frozen["layers/wk"][:] = True      # Tier 1: whole-type drop, re-jit
+    return frozen
+
+with use_mesh(mesh, DEFAULT_RULES):
+    s_p = s_f = state
+    bi = 0
+    for stage in range(3):
+        frozen = masks(stage)
+        static = fully_frozen_types(frozen)
+        plan = segment_plan(frozen, spec, L, tcfg.segment_max)
+        rp = gradient_reduce_plan(spec, static, plan, L)
+        assert rp.trivial == (stage == 0), (stage, rp)
+        planned = jax.jit(make_train_step(cfg, tcfg, spec, static, plan=plan,
+                                          reduce_plan=rp))
+        full = jax.jit(make_train_step(cfg, tcfg, spec, static, plan=plan,
+                                       reduce_plan=None))
+        for _ in range(2):
+            b = jax.device_put(batches[bi], NamedSharding(mesh, P("data")))
+            bi += 1
+            s_p, m_p = planned(s_p, b)
+            s_f, m_f = full(s_f, b)
+            for x, y in zip(jax.tree.leaves(jax.device_get(s_p)),
+                            jax.tree.leaves(jax.device_get(s_f))):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                              err_msg=f"stage {stage}")
+            assert float(m_p["loss"]) == float(m_f["loss"]), stage
+print("OK wavefront bit-identical")
+""")
+
+
+@pytest.mark.slow
+def test_compressed_reduce_convergence_and_ef_resume():
+    """Acceptance: int8-EF compression on the 8-way explicit reduce (a)
+    converges in parity with the uncompressed run, and (b) a crash-resume
+    from a checkpoint restores the error buffers bit-identically — the
+    resumed run lands bit-for-bit on the uninterrupted one, EF included."""
+    run_py("""
+import os, shutil, tempfile
+import jax, numpy as np
+import repro.configs as configs
+from repro.config import GradESConfig, TrainConfig
+from repro.distributed.sharding import use_mesh, DEFAULT_RULES
+from repro.train.loop import Trainer
+
+CFG = configs.reduced("qwen3-0.6b")
+base = dict(seq_len=32, global_batch=8, steps=16, lr=3e-3, sync_interval=4,
+            reduce_mode="explicit", grades=GradESConfig(enabled=False))
+mesh = jax.make_mesh((8,), ("data",))
+
+def trees_equal(a, b, what):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=what)
+
+d = tempfile.mkdtemp()
+try:
+    with use_mesh(mesh, DEFAULT_RULES):
+        tcfg = TrainConfig(**base, grad_compression="int8_ef",
+                           checkpoint_dir=d, checkpoint_every=8,
+                           keep_checkpoints=5)
+        r_a = Trainer(CFG, tcfg, log_every=4).train()
+        assert r_a.state.ef_error is not None
+        assert sorted(os.listdir(d)) == ["step_16", "step_8"]
+        shutil.rmtree(os.path.join(d, "step_16"))  # crash after step 8
+        r_b = Trainer(CFG, tcfg, log_every=4).train()
+        assert r_b.steps_run == 8  # resumed from the boundary
+        trees_equal(r_a.state.params, r_b.state.params, "params")
+        trees_equal(r_a.state.opt, r_b.state.opt, "opt")
+        trees_equal(r_a.state.ef_error, r_b.state.ef_error, "ef_error")
+        # convergence parity vs the uncompressed explicit reduce
+        r_u = Trainer(CFG, TrainConfig(**base), log_every=4).train()
+    lc = [h["loss"] for h in r_a.history if "loss" in h]
+    lu = [h["loss"] for h in r_u.history if "loss" in h]
+    assert lc[-1] < lc[0], lc      # it actually trains
+    print("LOSSES", lc[-1], lu[-1])
+    assert abs(lc[-1] - lu[-1]) < 0.05 * abs(lu[-1]) + 0.05, (lc, lu)
+finally:
+    shutil.rmtree(d, ignore_errors=True)
+print("OK compressed parity + EF resume")
+""")

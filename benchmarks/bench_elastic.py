@@ -1,0 +1,210 @@
+"""Elastic-supervisor overhead + recovery drill (DESIGN.md §4b).
+
+Two measurements, emitted as ``BENCH_elastic.json`` (repo root and
+``artifacts/elastic/``):
+
+1. **Supervision overhead per boundary** — one poll-body's worth of
+   coordinator work (read every rank's heartbeat file, derive the liveness
+   deadline from the chief's EMA, evaluate the restart policy, check stop
+   files) timed against the measured block dispatch time of the real trainer
+   at the same K.  The supervisor rides host-side next to the sync-boundary
+   runtime, so its cost must be invisible: asserted **< 1%** of a block.
+
+2. **Recovery drill** — a stub-worker fleet (no jax in the workers, so the
+   numbers isolate COORDINATOR latency, not XLA compile time) through the
+   full lifecycle: crash→backoff restart, budget-exhausted scale-down,
+   scheduled scale-up.  Records recovery latency per event, restart count,
+   and steps lost per fault.  If the slow-lane fleet test has left a real
+   trainer fleet summary under ``artifacts/elastic/``, its (compile-
+   dominated) recovery numbers are folded in for contrast.
+
+Run:  PYTHONPATH=src:. python benchmarks/bench_elastic.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+ART = os.path.join(ROOT, "artifacts", "elastic")
+
+WORLD = 4
+K = 4  # sync_interval for both the trainer measurement and the deadline math
+
+STUB_CHIEF = """
+import os, signal, sys, time
+sys.path.insert(0, {src!r})
+from repro.elastic.heartbeat import HeartbeatWriter
+fleet = {fleet!r}
+with open(os.path.join(fleet, "launches.txt"), "a") as f:
+    f.write("x")
+n_launch = os.path.getsize(os.path.join(fleet, "launches.txt"))
+flag = {{}}
+signal.signal(signal.SIGTERM, lambda *a: flag.setdefault("term", True))
+hb = HeartbeatWriter(fleet, 0, interval=0.03).start()
+step = 0
+while True:
+    step += 1
+    hb.update(step, 0.03)
+    time.sleep(0.03)
+    if flag.get("term"):
+        hb.stop(); sys.exit(75)
+    if n_launch == 1 and step >= 6:
+        os._exit(1)
+    if step >= 40:
+        hb.stop(); sys.exit(0)
+"""
+
+STUB_FOLLOWER = """
+import sys
+sys.path.insert(0, {src!r})
+from repro.elastic.worker import follower_main
+sys.exit(follower_main({fleet!r}, {rank}, {world}, interval=0.03))
+"""
+
+
+def measure_supervision_overhead() -> dict:
+    """One poll-body of coordinator work per boundary, micro-timed over a
+    realistic on-disk fleet (WORLD heartbeat files)."""
+    from repro.elastic.heartbeat import (Heartbeat, heartbeat_deadline,
+                                         read_fleet, write_heartbeat)
+    from repro.elastic.policy import RestartPolicy
+    from repro.elastic.worker import stop_requested
+
+    d = tempfile.mkdtemp()
+    try:
+        for rank in range(WORLD):
+            write_heartbeat(d, Heartbeat(rank=rank, pid=1000 + rank,
+                                         step=8, ema_dt=0.02,
+                                         time=time.time(), seq=9))
+        policy = RestartPolicy()
+        n = 2000
+        t0 = time.perf_counter()
+        for _ in range(n):
+            fleet = read_fleet(d, WORLD)
+            heartbeat_deadline(0.5, fleet[0].ema_dt, K)
+            for rank in range(WORLD):
+                stop_requested(d, rank)
+            policy.decide(0, 0, 0)
+            policy.backoff_delay(0, 0)
+        per_boundary_s = (time.perf_counter() - t0) / n
+    finally:
+        shutil.rmtree(d)
+    return {"per_boundary_us": round(per_boundary_s * 1e6, 2),
+            "world_size": WORLD}
+
+
+def measure_block_dispatch() -> dict:
+    """Median steady-state block time of the real trainer at the same K."""
+    import repro.configs as configs
+    from repro.config import GradESConfig, TrainConfig
+    from repro.train.loop import Trainer
+
+    cfg = configs.reduced("qwen3-0.6b")
+    tcfg = TrainConfig(seq_len=32, global_batch=4, steps=24, lr=3e-3,
+                       sync_interval=K,
+                       grades=GradESConfig(enabled=True, tau=4e-3))
+    res = Trainer(cfg, tcfg, log_every=1).train()
+    dts = sorted(r["dt"] for r in res.history[2:] if "dt" in r)
+    per_step = dts[len(dts) // 2]
+    return {"block_us": round(per_step * K * 1e6, 1),
+            "per_step_us": round(per_step * 1e6, 1), "sync_interval": K}
+
+
+def recovery_drill() -> dict:
+    """Full coordinator lifecycle over stub workers: crash→restart, budget
+    exhaustion→scale-down, scheduled scale-up."""
+    from repro.elastic.coordinator import Coordinator, FleetConfig
+    from repro.elastic.policy import RestartPolicy
+
+    src = os.path.abspath(os.path.join(ROOT, "src"))
+
+    def build(rank, world, fleet_dir, train_args):
+        code = (STUB_CHIEF.format(src=src, fleet=fleet_dir) if rank == 0 else
+                STUB_FOLLOWER.format(src=src, fleet=fleet_dir, rank=rank,
+                                     world=world))
+        return [sys.executable, "-c", code]
+
+    d = tempfile.mkdtemp()
+    try:
+        fc = FleetConfig(fleet_dir=d, ckpt_dir=os.path.join(d, "ckpt"),
+                         world_size=3, min_world=2, target_world=3,
+                         scale_up_at=20, poll_interval=0.02, hb_interval=0.03,
+                         drain_timeout=20.0,
+                         policy=RestartPolicy(max_restarts=0,
+                                              backoff_base=0.05))
+        os.makedirs(fc.ckpt_dir)
+        res = Coordinator(fc, command=build).run(timeout=120)
+        assert res.ok, res.reason
+        summary = res.summary()
+        resizes = [e for e in res.events if e.get("kind") == "resize"]
+        return {
+            "ok": summary["ok"],
+            "world_history": summary["world_history"],
+            "restarts": summary["restarts"],
+            "steps_lost_total": summary["steps_lost_total"],
+            "recovery_s_max": summary["recovery_s_max"],
+            "resize_recovery_s": [e["recovery_s"] for e in resizes],
+            "chief_rebeat_s": [e.get("chief_rebeat_s") for e in resizes],
+        }
+    finally:
+        shutil.rmtree(d)
+
+
+def real_fleet_summary() -> dict | None:
+    """Recovery numbers from the slow-lane real-trainer fleet, if it ran."""
+    out = {}
+    for name in ("elastic_resize", "elastic_preempt"):
+        p = os.path.join(ART, name, "fleet_summary.json")
+        try:
+            with open(p) as f:
+                s = json.load(f)
+        except (OSError, ValueError):
+            continue
+        out[name] = {k: s[k] for k in ("ok", "world_history", "restarts",
+                                       "steps_lost_total", "recovery_s_max")
+                     if k in s}
+    return out or None
+
+
+def run() -> dict:
+    overhead = measure_supervision_overhead()
+    block = measure_block_dispatch()
+    frac = overhead["per_boundary_us"] / block["block_us"]
+    result = {
+        "supervision": {**overhead, **block,
+                        "overhead_frac": round(frac, 6)},
+        "recovery_drill": recovery_drill(),
+    }
+    real = real_fleet_summary()
+    if real:
+        result["real_fleet"] = real
+    assert frac < 0.01, (
+        f"coordinator supervision is {frac:.2%} of a block "
+        f"({overhead['per_boundary_us']}us vs {block['block_us']}us) — "
+        f"budget is <1%")
+    return result
+
+
+def main():
+    result = run()
+    os.makedirs(ART, exist_ok=True)
+    for path in (os.path.join(ROOT, "BENCH_elastic.json"),
+                 os.path.join(ART, "BENCH_elastic.json")):
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+            f.write("\n")
+    print(json.dumps(result, indent=1))
+    sup = result["supervision"]
+    print(f"\nsupervision: {sup['per_boundary_us']}us/boundary vs "
+          f"{sup['block_us']}us/block -> {sup['overhead_frac']:.4%} (<1% ok)")
+
+
+if __name__ == "__main__":
+    main()

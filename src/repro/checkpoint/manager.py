@@ -28,11 +28,13 @@
 """
 from __future__ import annotations
 
+import itertools
 import json
 import logging
 import os
 import shutil
 import threading
+import time
 import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -41,6 +43,10 @@ import ml_dtypes
 import numpy as np
 
 log = logging.getLogger(__name__)
+
+#: Process-wide staging-dir counter: combined with the pid it makes every
+#: save's tmp dir unique even across manager instances sharing a directory.
+_tmp_seq = itertools.count(1)
 
 #: numpy can't round-trip ml_dtypes (bf16 etc.) through np.save; the manifest
 #: records the true dtype and restore re-views the raw buffer.
@@ -73,9 +79,14 @@ class CheckpointManager:
         self.wait()
         host_leaves = {k: np.asarray(jax.device_get(v))
                        for k, v in _flatten(state).items()}
+        seq = next(_tmp_seq)
 
         def _write():
-            tmp = os.path.join(self.dir, f"step_{step}.tmp")
+            # Tmp dir name is unique per (process, save): concurrent writers
+            # racing the same boundary step — an elastic fleet's old and
+            # relaunched chief, overlapping at a drain — never share a
+            # staging dir, so neither can tear the other's leaves mid-write.
+            tmp = os.path.join(self.dir, f"step_{step}.tmp-{os.getpid()}-{seq}")
             final = os.path.join(self.dir, f"step_{step}")
             os.makedirs(tmp, exist_ok=True)
             manifest = {}
@@ -92,9 +103,23 @@ class CheckpointManager:
                 json.dump({"step": step, "leaves": manifest}, f)
                 f.flush()
                 os.fsync(f.fileno())
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)
+            # Publish via rename.  If a racing writer publishes the same step
+            # between our rmtree and rename, the rename fails (non-empty
+            # target) — retry the clear-then-rename with a short backoff;
+            # boundary saves at a given step are bit-deterministic, so
+            # whichever writer wins leaves identical state.
+            for attempt in range(8):
+                try:
+                    if os.path.exists(final):
+                        shutil.rmtree(final)
+                    os.rename(tmp, final)
+                    break
+                except OSError:
+                    if attempt == 7:
+                        # someone else keeps winning the slot — drop our copy
+                        shutil.rmtree(tmp, ignore_errors=True)
+                    else:
+                        time.sleep(0.005 * (attempt + 1))
             self._retain()
 
         if blocking:
@@ -200,5 +225,7 @@ class CheckpointManager:
 
     def _gc_tmp(self):
         for d in os.listdir(self.dir):
-            if d.endswith(".tmp"):
+            # both the legacy shared name (`step_8.tmp`) and the unique
+            # per-writer names (`step_8.tmp-<pid>-<seq>`)
+            if ".tmp" in d and d.startswith("step_"):
                 shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)

@@ -1,0 +1,22 @@
+"""Elastic multi-host supervision: preemption-tolerant worker fleets with
+boundary-aligned scale-up/down and bit-identical resume (DESIGN.md §4b).
+
+Import surface is deliberately lazy-friendly: ``heartbeat``/``policy``/
+``worker``/``coordinator`` are stdlib+numpy only (no jax), so the supervisor
+and follower ranks never pay a device-runtime startup.
+"""
+from repro.elastic.heartbeat import (DEFAULT_INTERVAL, Heartbeat,
+                                     HeartbeatWriter, heartbeat_deadline,
+                                     read_fleet, read_heartbeat,
+                                     write_heartbeat)
+from repro.elastic.policy import Action, Decision, RestartPolicy
+from repro.elastic.worker import (chief_xla_flags, follower_main, stop_path,
+                                  stop_requested, worker_command, worker_env)
+
+__all__ = [
+    "DEFAULT_INTERVAL", "Heartbeat", "HeartbeatWriter", "heartbeat_deadline",
+    "read_fleet", "read_heartbeat", "write_heartbeat",
+    "Action", "Decision", "RestartPolicy",
+    "chief_xla_flags", "follower_main", "stop_path", "stop_requested",
+    "worker_command", "worker_env",
+]

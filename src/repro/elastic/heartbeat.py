@@ -1,0 +1,154 @@
+"""Fleet liveness: heartbeat files + the EMA-derived loss deadline.
+
+Every worker of an elastic fleet (DESIGN.md §4b) publishes a small JSON
+heartbeat file under the fleet directory — atomically (tmp + ``os.replace``),
+so a reader never sees a torn beat.  Liveness is **time-keyed, not
+progress-keyed**: a background thread beats every ``interval`` seconds no
+matter what the training loop is doing, so a 60-second XLA compile does not
+read as a dead worker.  Progress (the chief's last drained global step and its
+straggler-watchdog per-step EMA) rides *in* the beat payload via
+:meth:`HeartbeatWriter.update`, which the trainer calls from its metric-drain
+hook — the coordinator uses the step to key scheduled fleet faults and
+scale-up events, and the EMA to scale the loss deadline.
+
+Deliberately stdlib-only (no jax, no numpy): follower workers and the
+coordinator import this without paying a jax startup, and the tier-1 stub
+fleets stay fast.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+#: Default beat cadence (seconds).  The deadline floor below tolerates several
+#: missed beats before a worker is presumed lost.
+DEFAULT_INTERVAL = 0.5
+
+
+@dataclass(frozen=True)
+class Heartbeat:
+    rank: int
+    pid: int
+    step: int          # chief: last drained global step; followers: -1
+    ema_dt: float      # chief: straggler-watchdog per-step EMA (0.0 until seeded)
+    time: float        # writer wall clock at the beat (time.time())
+    seq: int           # monotone beat counter (distinguishes stall from clock skew)
+
+
+def hb_path(fleet_dir: str, rank: int) -> str:
+    return os.path.join(fleet_dir, f"hb_{rank}.json")
+
+
+def write_heartbeat(fleet_dir: str, beat: Heartbeat) -> None:
+    """Atomic publish: write-to-tmp then ``os.replace`` — a crash mid-write
+    leaves the previous beat intact, never a torn file."""
+    path = hb_path(fleet_dir, beat.rank)
+    tmp = f"{path}.tmp.{beat.pid}"
+    with open(tmp, "w") as f:
+        json.dump(asdict(beat), f)
+    os.replace(tmp, path)
+
+
+def read_heartbeat(fleet_dir: str, rank: int) -> Optional[Heartbeat]:
+    """The worker's latest beat, or None before its first one (a partial or
+    unparseable file reads as absent — the writer is atomic, so that can only
+    be a not-yet-written beat)."""
+    try:
+        with open(hb_path(fleet_dir, rank)) as f:
+            return Heartbeat(**json.load(f))
+    except (OSError, ValueError, TypeError, KeyError):
+        return None
+
+
+def read_fleet(fleet_dir: str, world_size: int) -> Dict[int, Heartbeat]:
+    """All ranks' latest beats (missing ranks omitted)."""
+    out: Dict[int, Heartbeat] = {}
+    for rank in range(world_size):
+        hb = read_heartbeat(fleet_dir, rank)
+        if hb is not None:
+            out[rank] = hb
+    return out
+
+
+def heartbeat_deadline(interval: float, ema_dt: Optional[float],
+                       sync_interval: int, *, slack: float = 4.0,
+                       floor: float = 10.0) -> float:
+    """Seconds of beat silence after which a worker is presumed lost.
+
+    Derived from the straggler watchdog's per-step EMA (``train/loop.py``):
+    the watchdog already maintains the best available estimate of healthy
+    device time, so the liveness deadline tolerates ``slack`` missed beats
+    *plus* ``slack`` EMA-priced blocks — a straggling-but-alive worker trips
+    the (cheaper, resumable) in-band watchdog escalation before the
+    coordinator's (expensive, state-losing) SIGKILL.  The floor absorbs
+    process startup and beats lost to scheduler jitter."""
+    ema = float(ema_dt) if ema_dt else 0.0
+    return max(float(floor), slack * interval + slack * ema * max(sync_interval, 1))
+
+
+class HeartbeatWriter:
+    """Background thread publishing one worker's beats.
+
+    ``update(step, ema_dt)`` is the trainer's progress callback — it only
+    stores into a cell (no I/O, can't block or fail the training thread); the
+    beat thread folds the latest values into its next publish.  ``stop()``
+    writes one final beat (so a graceful exit's last step is visible) and
+    joins the thread."""
+
+    def __init__(self, fleet_dir: str, rank: int, *,
+                 interval: float = DEFAULT_INTERVAL):
+        self.fleet_dir = fleet_dir
+        self.rank = rank
+        self.interval = interval
+        self._step = -1
+        self._ema = 0.0
+        self._seq = 0
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # trainer-facing progress hook (cheap, never raises)
+    def update(self, step: int, ema_dt: Optional[float]) -> None:
+        with self._lock:
+            self._step = int(step)
+            if ema_dt:
+                self._ema = float(ema_dt)
+
+    def _beat(self) -> None:
+        with self._lock:
+            self._seq += 1
+            beat = Heartbeat(rank=self.rank, pid=os.getpid(), step=self._step,
+                             ema_dt=self._ema, time=time.time(), seq=self._seq)
+        try:
+            write_heartbeat(self.fleet_dir, beat)
+        except OSError:
+            pass  # fleet dir went away mid-shutdown; liveness loss is the signal
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.interval):
+            self._beat()
+
+    def start(self) -> "HeartbeatWriter":
+        os.makedirs(self.fleet_dir, exist_ok=True)
+        self._beat()  # first beat synchronously: spawn→liveness gap is bounded
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=f"heartbeat-{self.rank}")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._beat()
+
+    def __enter__(self) -> "HeartbeatWriter":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

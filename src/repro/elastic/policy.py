@@ -1,0 +1,99 @@
+"""Exit-code-aware restart policy for the elastic supervisor (DESIGN.md §4b).
+
+The trainer already speaks a small exit-code protocol
+(``robustness/faults.py``): 75 = drained to a resumable boundary checkpoint,
+76 = straggler escalation, 77 = numerics guard exhausted, 0 = clean finish,
+anything else (incl. negative = died on a signal) = crash.  The policy turns
+one worker exit into one :class:`Decision`:
+
+=============================  ============================================
+worker exit                    decision
+=============================  ============================================
+0                              ``DONE`` — clean finish.
+75 (``EXIT_PREEMPTED``)        ``RESUME`` — relaunch immediately, no backoff
+                               and no budget charge: the worker *chose* to
+                               exit at a boundary checkpoint, so
+                               ``latest_valid()`` resume loses nothing.
+76 / 77                        ``ESCALATE`` — halt the fleet and surface the
+                               code: a persistently slow device or exhausted
+                               numerics budget is not fixed by respawning.
+crash (signal / other code)    ``RESTART`` with exponential backoff +
+                               deterministic jitter while the rank's restart
+                               budget lasts; ``GIVE_UP`` past it (the
+                               coordinator maps GIVE_UP to a boundary-aligned
+                               scale-down, or a halt at ``min_world``).
+=============================  ============================================
+
+Backoff is **pure in (seed, rank, attempt)** — same fleet seed, same crash
+history, bit-identical delay sequence — so chaos runs replay exactly and the
+delays themselves are unit-testable (``tests/test_elastic.py``).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.robustness.faults import (EXIT_NONFINITE, EXIT_OK, EXIT_PREEMPTED,
+                                     EXIT_STRAGGLER)
+
+
+class Action(enum.Enum):
+    DONE = "done"            # clean worker finish
+    RESUME = "resume"        # boundary-drained (75): relaunch immediately
+    RESTART = "restart"      # crash: relaunch after Decision.delay_s
+    GIVE_UP = "give_up"      # crash past the restart budget: degrade the fleet
+    ESCALATE = "escalate"    # 76/77: halt the fleet, surface the exit code
+
+
+@dataclass(frozen=True)
+class Decision:
+    action: Action
+    delay_s: float = 0.0
+    reason: str = ""
+
+
+@dataclass(frozen=True)
+class RestartPolicy:
+    """Per-rank crash-restart budget + deterministic backoff schedule."""
+
+    max_restarts: int = 3        # crash restarts per rank before GIVE_UP
+    backoff_base: float = 0.25   # first-crash delay (seconds)
+    backoff_cap: float = 30.0    # exponential growth saturates here
+    jitter: float = 0.5          # max extra fraction of the base delay
+    seed: int = 0                # keys the jitter (pure, replayable)
+
+    def backoff_delay(self, rank: int, attempt: int) -> float:
+        """Delay before crash restart number ``attempt`` (0-based) of ``rank``:
+        ``min(base·2^attempt, cap) · (1 + jitter·u)`` with ``u ∈ [0, 1)`` drawn
+        pure in ``(seed, rank, attempt)`` — deterministic de-synchronization,
+        so a correlated fault (one bad batch crashing several ranks) does not
+        produce a thundering-herd relaunch, yet replays bit-identically."""
+        base = min(self.backoff_base * (2.0 ** attempt), self.backoff_cap)
+        u = float(np.random.default_rng((self.seed, rank, attempt)).random())
+        return base * (1.0 + self.jitter * u)
+
+    def decide(self, exit_code: int, rank: int, attempt: int) -> Decision:
+        """Map one worker exit to an action.  ``attempt`` is the number of
+        crash restarts this rank has already consumed at its current world
+        size (reset on resize/clean-drain, like a fresh scheduling of the
+        slot)."""
+        if exit_code == EXIT_OK:
+            return Decision(Action.DONE, reason="clean finish")
+        if exit_code == EXIT_PREEMPTED:
+            return Decision(Action.RESUME,
+                            reason="boundary drain (75): latest_valid resume")
+        if exit_code in (EXIT_STRAGGLER, EXIT_NONFINITE):
+            return Decision(Action.ESCALATE,
+                            reason=f"worker escalated exit {exit_code}")
+        if attempt >= self.max_restarts:
+            return Decision(Action.GIVE_UP,
+                            reason=f"rank {rank} exhausted its restart budget "
+                                   f"({self.max_restarts}) with exit "
+                                   f"{exit_code}")
+        delay = self.backoff_delay(rank, attempt)
+        return Decision(Action.RESTART, delay_s=delay,
+                        reason=f"crash exit {exit_code}: restart "
+                               f"{attempt + 1}/{self.max_restarts} after "
+                               f"{delay:.2f}s")

@@ -1,0 +1,93 @@
+"""Worker-side half of the elastic fleet (DESIGN.md §4b).
+
+Two pieces:
+
+* :func:`worker_command` / :func:`worker_env` — how the coordinator shapes a
+  worker process.  Every rank runs the *same* ``python -m repro.launch.train``
+  entry with a ``--worker-id/--world-size/--fleet-dir`` handshake; rank 0 (the
+  chief) additionally gets ``XLA_FLAGS=--xla_force_host_platform_device_count=
+  <world_size>`` so its process hosts the fleet's devices — the simulated-
+  multi-host contraction documented in ``elastic/coordinator.py``.
+
+* :func:`follower_main` — what a non-chief rank runs: publish heartbeats,
+  honor the drain protocol (SIGTERM/SIGINT → exit 75, like the chief's
+  graceful drain; a coordinator stop file → exit 0), and otherwise idle.
+  Followers never init a device runtime, so they spawn in well under a
+  second and fleet resizes are dominated by the chief's resume.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.elastic.heartbeat import DEFAULT_INTERVAL, HeartbeatWriter
+
+_DEVICE_COUNT_RE = re.compile(r"--xla_force_host_platform_device_count=\d+")
+
+
+def stop_path(fleet_dir: str, rank: Optional[int] = None) -> str:
+    """Coordinator→worker stop file: ``stop_all`` or per-rank ``stop_<r>``."""
+    name = "stop_all" if rank is None else f"stop_{rank}"
+    return os.path.join(fleet_dir, name)
+
+
+def stop_requested(fleet_dir: str, rank: int) -> bool:
+    return (os.path.exists(stop_path(fleet_dir)) or
+            os.path.exists(stop_path(fleet_dir, rank)))
+
+
+def chief_xla_flags(world_size: int, base: str = "") -> str:
+    """XLA_FLAGS for the chief: force ``world_size`` host-platform devices —
+    one per fleet worker — replacing any inherited device-count flag and
+    preserving the rest of the inherited string."""
+    flag = f"--xla_force_host_platform_device_count={world_size}"
+    if _DEVICE_COUNT_RE.search(base):
+        return _DEVICE_COUNT_RE.sub(flag, base)
+    return f"{base} {flag}".strip()
+
+
+def worker_env(rank: int, world_size: int,
+               base: Optional[Dict[str, str]] = None) -> Dict[str, str]:
+    env = dict(os.environ if base is None else base)
+    if rank == 0:
+        env["XLA_FLAGS"] = chief_xla_flags(world_size, env.get("XLA_FLAGS", ""))
+    return env
+
+
+def worker_command(rank: int, world_size: int, fleet_dir: str,
+                   train_args: Sequence[str]) -> List[str]:
+    """The ``launch/train.py`` invocation for one rank.  Followers get the
+    same argv (they branch on ``--worker-id`` before touching any of it), so
+    a rank promoted to chief by a future policy needs no new command line."""
+    return [sys.executable, "-m", "repro.launch.train", *train_args,
+            "--worker-id", str(rank), "--world-size", str(world_size),
+            "--fleet-dir", fleet_dir]
+
+
+def follower_main(fleet_dir: str, rank: int, world_size: int, *,
+                  interval: float = DEFAULT_INTERVAL) -> int:
+    """Non-chief worker loop: heartbeat until told to stop.
+
+    Exit protocol (what the coordinator's policy keys on):
+
+    * coordinator stop file → 0 (clean fleet shutdown);
+    * SIGTERM / SIGINT → 75 (``EXIT_PREEMPTED``) — the drain semantics of the
+      chief's :class:`~repro.robustness.harness.GracefulShutdown`, which a
+      follower satisfies trivially (it holds no state to checkpoint);
+    * killed outright → the usual negative return code, which the policy
+      treats as a crash.
+    """
+    from repro.robustness.faults import EXIT_OK, EXIT_PREEMPTED
+    from repro.robustness.harness import GracefulShutdown
+
+    with GracefulShutdown() as shutdown, \
+            HeartbeatWriter(fleet_dir, rank, interval=interval):
+        while True:
+            if stop_requested(fleet_dir, rank):
+                return EXIT_OK
+            if shutdown.requested:
+                return EXIT_PREEMPTED
+            time.sleep(min(interval, 0.1))

@@ -29,6 +29,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_fleet_mesh(world_size: int):
+    """Pure-DP mesh for an elastic fleet's chief (DESIGN.md §4b): one "data"
+    slot per fleet worker, laid over the host-platform devices the
+    coordinator's XLA_FLAGS forced into this process.  Pure-DP at every width
+    keeps the mesh eligible for the freeze-aware explicit reduce, so a resize
+    re-derives the ReducePlan rather than silently falling back to GSPMD."""
+    return jax.make_mesh((world_size,), ("data",))
+
+
 def rules_for(mesh) -> ShardingRules:
     return MULTIPOD_RULES if "pod" in mesh.axis_names else DEFAULT_RULES
 

@@ -107,7 +107,31 @@ def main():
     ap.add_argument("--prefetch-stall-timeout", type=float, default=0.0,
                     help="seconds next() waits on the prefetch worker before "
                          "raising PrefetchStalled (0 = wait forever)")
+    ap.add_argument("--keep-checkpoints", type=int, default=3,
+                    help="boundary checkpoints retained on disk (older ones "
+                         "are GC'd; raise for bit-identity audits that diff "
+                         "every boundary)")
+    # --- elastic fleet handshake (DESIGN.md §4b) ---
+    ap.add_argument("--worker-id", type=int, default=0,
+                    help="rank within an elastic fleet (0 = chief, which "
+                         "hosts the devices; >0 = heartbeat-only follower)")
+    ap.add_argument("--world-size", type=int, default=0,
+                    help="fleet size; >0 runs under an elastic coordinator: "
+                         "the chief trains on a pure-DP fleet mesh of this "
+                         "width, followers idle in follower_main")
+    ap.add_argument("--fleet-dir", default="",
+                    help="fleet rendezvous dir (heartbeats + stop files); "
+                         "required when --world-size is set")
     args = ap.parse_args()
+
+    if args.world_size > 0 and not args.fleet_dir:
+        ap.error("--world-size requires --fleet-dir")
+    if args.world_size > 0 and args.worker_id > 0:
+        # Followers never build a model or touch the device runtime — they
+        # heartbeat and honor the drain protocol (elastic/worker.py).
+        from repro.elastic.worker import follower_main
+        sys.exit(follower_main(args.fleet_dir, args.worker_id,
+                               args.world_size))
 
     cfg = configs.reduced(args.arch) if args.reduced else configs.get(args.arch)
     if args.attn_chunk_threshold:
@@ -137,8 +161,14 @@ def main():
         prefetch_stall_timeout=args.prefetch_stall_timeout,
         fault_plan=(FaultPlan.parse(args.inject_fault, seed=args.fault_seed)
                     if args.inject_fault else None),
+        keep_checkpoints=args.keep_checkpoints,
     )
-    trainer = Trainer(cfg, tcfg, log_every=10, log_path=args.log or None)
+    hb = None
+    if args.world_size > 0:  # chief of an elastic fleet: publish heartbeats
+        from repro.elastic.heartbeat import HeartbeatWriter
+        hb = HeartbeatWriter(args.fleet_dir, 0)
+    trainer = Trainer(cfg, tcfg, log_every=10, log_path=args.log or None,
+                      progress_cb=hb.update if hb is not None else None)
 
     def run():
         val = None
@@ -147,7 +177,12 @@ def main():
             val = list(make_batches(cfg, tcfg, steps=4, seed_offset=777))
         return trainer.train(val_batches=val)
 
-    if args.mesh != "none":
+    if args.world_size > 0:
+        from repro.launch.mesh import make_fleet_mesh
+        mesh = make_fleet_mesh(args.world_size)
+        with use_mesh(mesh, rules_for(mesh)), hb:
+            res = run()
+    elif args.mesh != "none":
         mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
         with use_mesh(mesh, rules_for(mesh)):
             res = run()

@@ -41,6 +41,14 @@ kind           effect at / around ``step``
 ``straggler``  the block containing ``step`` completes ``arg`` seconds late
                (default 1.0) — host-side sleep before the metric drain, which
                is exactly where device slowness is observed.
+``preempt``    fleet-level (actuated by ``elastic/coordinator.py``, not by the
+               in-process actuator): once the chief's heartbeat step reaches
+               ``step``, one worker — chosen pure in ``(seed, step)`` —
+               receives a preemption notice: SIGTERM, then SIGKILL after
+               ``arg`` grace seconds (default 5.0) if it has not exited.
+``worker_lost``  fleet-level ditto: SIGKILL rank ``arg`` outright at ``step``
+               (no grace, no drain — a reclaimed spot VM); with no ``arg``
+               the victim rank is chosen pure in ``(seed, step)``.
 =============  ==============================================================
 """
 from __future__ import annotations
@@ -65,7 +73,11 @@ _STOP_EXIT_CODES = {
 }
 
 FAULT_KINDS = ("kill", "sigterm", "nan_grad", "inf_grad", "ckpt_corrupt",
-               "io_error", "straggler", "comm_corrupt")
+               "io_error", "straggler", "comm_corrupt", "preempt",
+               "worker_lost")
+#: Fleet-level kinds: actuated by the elastic coordinator against worker
+#: processes; inert inside a single worker's own FaultPlan.
+FLEET_KINDS = ("preempt", "worker_lost")
 CORRUPT_MODES = ("bitflip", "truncate", "delete_leaf")
 
 
@@ -178,6 +190,35 @@ class FaultPlan:
             if start <= f.step < start + size:
                 return float(f.arg) if f.arg else 1.0
         return 0.0
+
+    # ------------------------------------------------- fleet-level (elastic)
+    @property
+    def has_fleet_faults(self) -> bool:
+        return bool(self._of(*FLEET_KINDS))
+
+    def fleet_faults(self) -> Tuple[FaultSpec, ...]:
+        """The preempt/worker_lost schedule, ordered by trigger step; the
+        coordinator fires each spec once, when the chief's heartbeat step
+        first reaches ``spec.step``."""
+        return tuple(sorted(self._of(*FLEET_KINDS), key=lambda f: f.step))
+
+    def fleet_victim(self, step: int, world_size: int) -> int:
+        """Victim rank for a fleet fault at ``step`` — pure in ``(seed,
+        step)``, so a replayed chaos run reclaims the same worker."""
+        rng = np.random.default_rng((self.seed, step))
+        return int(rng.integers(max(world_size, 1)))
+
+    def victim_rank(self, spec: FaultSpec, world_size: int) -> int:
+        """``worker_lost``'s explicit ``:rank`` arg, else the seed-pure
+        choice (always seed-pure for ``preempt`` — a real preemption notice
+        names whichever host the cloud reclaims)."""
+        if spec.kind == "worker_lost" and spec.arg:
+            return int(spec.arg)
+        return self.fleet_victim(spec.step, world_size)
+
+    def preempt_grace(self, spec: FaultSpec) -> float:
+        """Grace seconds between a preempt notice's SIGTERM and its SIGKILL."""
+        return float(spec.arg) if spec.arg else 5.0
 
     # ------------------------------------------------- checkpoint corruption
     def corrupt_mode(self, step: int) -> Optional[str]:

@@ -2,13 +2,16 @@
 
 Two pieces live here:
 
-* :class:`GracefulShutdown` — the SIGTERM half of DESIGN.md §4.  Installing it
-  turns SIGTERM into a *drain request*: the trainer finishes the in-flight
-  block, writes a boundary checkpoint synchronously, and returns with
-  ``stop_reason="preempted"`` (exit code :data:`~repro.robustness.faults.EXIT_PREEMPTED`,
-  from which a supervisor resumes bit-identically).  A second SIGTERM while
-  draining restores the previous handler, so an impatient supervisor's
-  escalation still works.
+* :class:`GracefulShutdown` — the SIGTERM/SIGINT half of DESIGN.md §4.
+  Installing it turns either signal into a *drain request*: the trainer
+  finishes the in-flight block, writes a boundary checkpoint synchronously,
+  and returns with ``stop_reason="preempted"`` (exit code
+  :data:`~repro.robustness.faults.EXIT_PREEMPTED`, from which a supervisor
+  resumes bit-identically).  SIGINT gets the same semantics so a Ctrl-C'd dev
+  run drains instead of dying mid-block.  A second delivery of the *same*
+  signal while draining restores that signal's previous handler and re-raises,
+  so an impatient supervisor's escalation (or a second Ctrl-C's
+  KeyboardInterrupt) still works.
 
 * :class:`FaultActuator` — executes the host-visible faults of a
   :class:`~repro.robustness.faults.FaultPlan` at the trainer's natural hook
@@ -31,39 +34,44 @@ log = logging.getLogger(__name__)
 
 
 class GracefulShutdown:
-    """SIGTERM → "finish the block, checkpoint, exit resumable".
+    """SIGTERM/SIGINT → "finish the block, checkpoint, exit resumable".
 
     Usable as a context manager; also test-friendly: ``request()`` simulates
     delivery without a real signal, and construction with ``install=False``
     leaves process handlers untouched (the default inside ``Trainer.train``
     only installs when running in the main thread, where signal handlers are
-    legal)."""
+    legal).  ``signals`` defaults to both drain signals; previous handlers are
+    tracked per-signal, so a second SIGINT while draining re-raises as a
+    KeyboardInterrupt while the SIGTERM shield stays up (and vice versa)."""
 
-    def __init__(self, install: bool = True):
+    SIGNALS = (signal.SIGTERM, signal.SIGINT)
+
+    def __init__(self, install: bool = True,
+                 signals: Tuple[signal.Signals, ...] = SIGNALS):
         self._requested = False
-        self._prev = None
-        self._installed = False
+        self._prev: dict = {}
         if install:
-            try:
-                self._prev = signal.signal(signal.SIGTERM, self._handler)
-                self._installed = True
-            except ValueError:  # not the main thread
-                pass
+            for sig in signals:
+                try:
+                    self._prev[sig] = signal.signal(sig, self._handler)
+                except ValueError:  # not the main thread
+                    break
 
     def _handler(self, signum, frame):
-        if self._requested and self._prev is not None:
-            # second SIGTERM while draining: stop shielding, let the previous
-            # handler (usually default-terminate) take it
-            signal.signal(signal.SIGTERM, self._prev)
-            self._prev = None
-            os.kill(os.getpid(), signal.SIGTERM)
+        sig = signal.Signals(signum)
+        if self._requested and sig in self._prev:
+            # second delivery of this signal while draining: stop shielding
+            # it, let its previous handler (default-terminate for SIGTERM,
+            # KeyboardInterrupt for SIGINT) take this re-raise
+            signal.signal(sig, self._prev.pop(sig))
+            os.kill(os.getpid(), sig)
             return
-        log.warning("SIGTERM received: draining in-flight block, then "
-                    "writing a boundary checkpoint")
+        log.warning("%s received: draining in-flight block, then "
+                    "writing a boundary checkpoint", sig.name)
         self._requested = True
 
     def request(self) -> None:
-        """Simulate SIGTERM delivery (in-process tests)."""
+        """Simulate drain-signal delivery (in-process tests)."""
         self._requested = True
 
     @property
@@ -71,10 +79,9 @@ class GracefulShutdown:
         return self._requested
 
     def uninstall(self) -> None:
-        if self._installed and self._prev is not None:
-            signal.signal(signal.SIGTERM, self._prev)
-        self._installed = False
-        self._prev = None
+        for sig, prev in self._prev.items():
+            signal.signal(sig, prev)
+        self._prev = {}
 
     def __enter__(self) -> "GracefulShutdown":
         return self

@@ -187,11 +187,17 @@ class _Inflight:
 class Trainer:
     def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, *,
                  repartition_interval: int = 25, log_every: int = 10,
-                 log_path: Optional[str] = None):
+                 log_path: Optional[str] = None,
+                 progress_cb: Optional[Callable[[int, Optional[float]],
+                                                None]] = None):
         self.cfg, self.tcfg = cfg, tcfg
         self.repartition_interval = repartition_interval
         self.log_every = log_every
         self.log_path = log_path
+        # (last drained step, per-step EMA) observer — the elastic fleet's
+        # heartbeat hook (elastic/heartbeat.py).  Must be cheap and non-raising
+        # (called once per drained block on the training thread).
+        self.progress_cb = progress_cb
         self.ckpt = (CheckpointManager(tcfg.checkpoint_dir,
                                        keep=tcfg.keep_checkpoints)
                      if tcfg.checkpoint_dir else None)
@@ -478,6 +484,8 @@ class Trainer:
             if tier2_on and float(np.max(np.asarray(m["all_frozen"],
                                                     np.float64))) >= 1.0:
                 tier2 = True
+            if self.progress_cb is not None:
+                self.progress_cb(inflight.start + inflight.size, ema_dt)
             return tier2
 
         t0 = time.perf_counter()

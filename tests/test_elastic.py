@@ -1,0 +1,355 @@
+"""Tier-1 tests for the elastic supervisor (DESIGN.md §4b).
+
+Everything here is deliberately jax-free and fast: the policy/heartbeat/worker
+units are pure, and the coordinator scenarios run against *stub* worker
+processes (``python -c`` heartbeat loops injected via the coordinator's
+``command=`` hook) so a full crash→backoff→restart→scale-down→scale-up
+lifecycle exercises in a few seconds.  The real-trainer fleet (bit-identical
+resume across world sizes) lives in ``test_elastic_fleet.py`` (slow+elastic
+lane).
+"""
+import os
+import signal
+import sys
+import tempfile
+import time
+
+import pytest
+
+from repro.elastic.coordinator import Coordinator, FleetConfig
+from repro.elastic.heartbeat import (Heartbeat, HeartbeatWriter, hb_path,
+                                     heartbeat_deadline, read_fleet,
+                                     read_heartbeat, write_heartbeat)
+from repro.elastic.policy import Action, RestartPolicy
+from repro.elastic.worker import (chief_xla_flags, stop_path, stop_requested,
+                                  worker_command, worker_env)
+from repro.robustness.faults import (EXIT_NONFINITE, EXIT_PREEMPTED,
+                                     EXIT_STRAGGLER, FaultPlan)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ---------------------------------------------------------------- policy
+
+def test_policy_table():
+    p = RestartPolicy(max_restarts=2)
+    assert p.decide(0, 0, 0).action is Action.DONE
+    assert p.decide(EXIT_PREEMPTED, 0, 0).action is Action.RESUME
+    assert p.decide(EXIT_PREEMPTED, 0, 0).delay_s == 0.0
+    assert p.decide(EXIT_STRAGGLER, 0, 0).action is Action.ESCALATE
+    assert p.decide(EXIT_NONFINITE, 0, 0).action is Action.ESCALATE
+    # crashes: restart inside the budget, give up past it
+    assert p.decide(1, 0, 0).action is Action.RESTART
+    assert p.decide(-signal.SIGKILL, 0, 1).action is Action.RESTART
+    assert p.decide(1, 0, 2).action is Action.GIVE_UP
+    # a drained exit never charges the budget, even past it
+    assert p.decide(EXIT_PREEMPTED, 0, 99).action is Action.RESUME
+
+
+def test_backoff_deterministic_and_exponential():
+    p = RestartPolicy(backoff_base=0.25, backoff_cap=4.0, jitter=0.5, seed=7)
+    # pure in (seed, rank, attempt): same inputs, bit-identical delays
+    assert p.backoff_delay(1, 0) == p.backoff_delay(1, 0)
+    assert RestartPolicy(seed=7).backoff_delay(2, 3) == \
+        RestartPolicy(seed=7).backoff_delay(2, 3)
+    # different coordinates de-synchronize
+    assert p.backoff_delay(0, 0) != p.backoff_delay(1, 0)
+    assert p.backoff_delay(0, 0) != p.backoff_delay(0, 1)
+    # exponential envelope: base·2^attempt ≤ delay < base·2^attempt·(1+jitter)
+    for attempt in range(4):
+        base = min(0.25 * 2 ** attempt, 4.0)
+        d = p.backoff_delay(0, attempt)
+        assert base <= d < base * 1.5
+    # cap saturates the growth
+    assert p.backoff_delay(0, 20) < 4.0 * 1.5
+
+
+def test_decide_carries_backoff_delay():
+    p = RestartPolicy(max_restarts=3, seed=3)
+    d = p.decide(1, rank=2, attempt=1)
+    assert d.action is Action.RESTART
+    assert d.delay_s == p.backoff_delay(2, 1)
+
+
+# ------------------------------------------------------------- heartbeat
+
+def test_heartbeat_roundtrip(tmp_path):
+    beat = Heartbeat(rank=3, pid=123, step=42, ema_dt=0.01,
+                     time=time.time(), seq=7)
+    write_heartbeat(str(tmp_path), beat)
+    assert read_heartbeat(str(tmp_path), 3) == beat
+    assert read_heartbeat(str(tmp_path), 0) is None  # never beat
+
+
+def test_heartbeat_torn_file_reads_as_absent(tmp_path):
+    with open(hb_path(str(tmp_path), 1), "w") as f:
+        f.write('{"rank": 1, "pid"')  # torn mid-write
+    assert read_heartbeat(str(tmp_path), 1) is None
+
+
+def test_read_fleet_skips_missing(tmp_path):
+    for rank in (0, 2):
+        write_heartbeat(str(tmp_path), Heartbeat(
+            rank=rank, pid=1, step=rank, ema_dt=0.0, time=0.0, seq=1))
+    fleet = read_fleet(str(tmp_path), 4)
+    assert sorted(fleet) == [0, 2]
+    assert fleet[2].step == 2
+
+
+def test_heartbeat_deadline_floor_and_ema_scaling():
+    # no EMA yet: the floor rules
+    assert heartbeat_deadline(0.5, None, 8) == 10.0
+    assert heartbeat_deadline(0.5, 0.0, 8) == 10.0
+    # a slow fleet (2s/step, K=8) stretches the deadline past the floor:
+    # 4·0.5 + 4·2·8 = 66
+    assert heartbeat_deadline(0.5, 2.0, 8) == pytest.approx(66.0)
+    # deadline grows with the block size (beats are per-block observable)
+    assert heartbeat_deadline(0.5, 2.0, 16) > heartbeat_deadline(0.5, 2.0, 8)
+
+
+def test_heartbeat_writer_publishes_progress(tmp_path):
+    d = str(tmp_path)
+    with HeartbeatWriter(d, 0, interval=0.02) as hw:
+        first = read_heartbeat(d, 0)
+        assert first is not None and first.step == -1  # synchronous first beat
+        hw.update(16, 0.005)
+        time.sleep(0.08)
+        mid = read_heartbeat(d, 0)
+        assert mid.step == 16 and mid.ema_dt == 0.005
+        assert mid.seq > first.seq
+    final = read_heartbeat(d, 0)  # stop() writes one last beat
+    assert final.step == 16 and final.seq > mid.seq
+
+
+# ----------------------------------------------------------- worker shaping
+
+def test_chief_xla_flags_merge_and_replace():
+    assert chief_xla_flags(4) == "--xla_force_host_platform_device_count=4"
+    assert chief_xla_flags(4, "--xla_foo=1") == \
+        "--xla_foo=1 --xla_force_host_platform_device_count=4"
+    # an inherited device-count flag is replaced, neighbors preserved
+    assert chief_xla_flags(
+        3, "--xla_foo=1 --xla_force_host_platform_device_count=8 --bar") == \
+        "--xla_foo=1 --xla_force_host_platform_device_count=3 --bar"
+
+
+def test_worker_env_only_chief_gets_devices():
+    base = {"PATH": "/bin", "XLA_FLAGS": "--xla_foo=1"}
+    chief = worker_env(0, 4, base)
+    assert "--xla_force_host_platform_device_count=4" in chief["XLA_FLAGS"]
+    follower = worker_env(2, 4, base)
+    assert follower["XLA_FLAGS"] == "--xla_foo=1"
+
+
+def test_worker_command_handshake():
+    cmd = worker_command(2, 4, "/tmp/fleet", ["--arch", "x", "--steps", "8"])
+    assert cmd[:3] == [sys.executable, "-m", "repro.launch.train"]
+    tail = cmd[3:]
+    assert tail[:4] == ["--arch", "x", "--steps", "8"]
+    assert tail[4:] == ["--worker-id", "2", "--world-size", "4",
+                       "--fleet-dir", "/tmp/fleet"]
+
+
+def test_stop_files(tmp_path):
+    d = str(tmp_path)
+    assert not stop_requested(d, 1)
+    open(stop_path(d, 1), "w").close()
+    assert stop_requested(d, 1) and not stop_requested(d, 0)
+    open(stop_path(d), "w").close()  # stop_all reaches every rank
+    assert stop_requested(d, 0)
+
+
+# ------------------------------------------------------- fleet fault plan
+
+def test_fleet_fault_parse_and_accessors():
+    plan = FaultPlan.parse(["worker_lost@12:2", "preempt@4:1.5"], seed=3)
+    assert plan.has_fleet_faults
+    faults = plan.fleet_faults()
+    assert [(f.kind, f.step) for f in faults] == [("preempt", 4),
+                                                 ("worker_lost", 12)]
+    assert plan.preempt_grace(faults[0]) == 1.5
+    assert plan.victim_rank(faults[1], world_size=4) == 2  # explicit rank
+    # no fleet kinds → inert
+    assert not FaultPlan.parse(["kill@10"], seed=3).has_fleet_faults
+
+
+def test_fleet_victim_pure_in_seed_and_step():
+    a = FaultPlan(seed=5)
+    b = FaultPlan(seed=5)
+    for step in (1, 7, 40):
+        assert a.fleet_victim(step, 4) == b.fleet_victim(step, 4)
+        assert 0 <= a.fleet_victim(step, 4) < 4
+    # the choice actually depends on both coordinates
+    picks = {FaultPlan(seed=s).fleet_victim(step, 16)
+             for s in range(6) for step in (3, 9)}
+    assert len(picks) > 1
+    # preempt with no explicit arg uses the seed-pure choice
+    spec = FaultPlan.parse(["preempt@9"], seed=5).fleet_faults()[0]
+    assert a.victim_rank(spec, 8) == a.fleet_victim(9, 8)
+    assert a.preempt_grace(spec) == 5.0
+
+
+# ------------------------------------------------- coordinator (stub fleet)
+
+STUB_CHIEF = """
+import os, signal, sys, time
+sys.path.insert(0, {src!r})
+from repro.elastic.heartbeat import HeartbeatWriter
+fleet = {fleet!r}
+with open(os.path.join(fleet, "launches.txt"), "a") as f:
+    f.write("x")
+n_launch = os.path.getsize(os.path.join(fleet, "launches.txt"))
+flag = {{}}
+signal.signal(signal.SIGTERM, lambda *a: flag.setdefault("term", True))
+hb = HeartbeatWriter(fleet, 0, interval=0.03).start()
+step = 0
+while True:
+    step += 1
+    hb.update(step, 0.03)
+    time.sleep(0.03)
+    if flag.get("term"):
+        hb.stop(); sys.exit(75)
+    if n_launch <= {crash_times} and step >= {crash_step}:
+        os._exit({crash_rc})
+    if step >= {done_step}:
+        hb.stop(); sys.exit(0)
+"""
+
+STUB_FOLLOWER = """
+import sys
+sys.path.insert(0, {src!r})
+from repro.elastic.worker import follower_main
+sys.exit(follower_main({fleet!r}, {rank}, {world}, interval=0.03))
+"""
+
+
+def stub_builder(*, crash_rc=1, crash_step=10 ** 9, crash_times=0,
+                 done_step=8):
+    """Coordinator ``command=`` hook: stub workers instead of real trainers.
+    The chief beats/advances a step every 30ms and crashes with ``crash_rc``
+    at ``crash_step`` on its first ``crash_times`` launches (a launch counter
+    persisted in the fleet dir survives restarts)."""
+    def build(rank, world, fleet_dir, train_args):
+        if rank == 0:
+            code = STUB_CHIEF.format(src=SRC, fleet=fleet_dir,
+                                     crash_rc=crash_rc, crash_step=crash_step,
+                                     crash_times=crash_times,
+                                     done_step=done_step)
+        else:
+            code = STUB_FOLLOWER.format(src=SRC, fleet=fleet_dir, rank=rank,
+                                        world=world)
+        return [sys.executable, "-c", code]
+    return build
+
+
+def fleet_config(fleet_dir, world, **kw):
+    kw.setdefault("policy", RestartPolicy(max_restarts=2, backoff_base=0.01,
+                                          backoff_cap=0.05))
+    return FleetConfig(fleet_dir=fleet_dir,
+                       ckpt_dir=os.path.join(fleet_dir, "ckpt"),
+                       world_size=world, poll_interval=0.02,
+                       hb_interval=0.03, drain_timeout=20.0, **kw)
+
+
+def run_fleet(world, *, builder, timeout=60.0, **cfg_kw):
+    with tempfile.TemporaryDirectory() as d:
+        fc = fleet_config(d, world, **cfg_kw)
+        os.makedirs(fc.ckpt_dir, exist_ok=True)
+        return Coordinator(fc, command=builder).run(timeout=timeout)
+
+
+def events_of(result, kind):
+    return [e for e in result.events if e.get("kind") == kind]
+
+
+def test_coordinator_clean_finish():
+    res = run_fleet(2, builder=stub_builder(done_step=5))
+    assert res.ok and res.exit_code == 0 and res.restarts == 0
+    assert res.world_history == [2]
+
+
+def test_coordinator_crash_restarts_with_backoff():
+    res = run_fleet(1, builder=stub_builder(crash_rc=1, crash_step=3,
+                                            crash_times=1, done_step=6))
+    assert res.ok and res.restarts == 1
+    exits = events_of(res, "worker_exit")
+    crash = [e for e in exits if e["rc"] == 1]
+    assert len(crash) == 1 and crash[0]["action"] == "restart"
+    # the recorded delay is the policy's deterministic backoff, replayable
+    policy = RestartPolicy(max_restarts=2, backoff_base=0.01,
+                           backoff_cap=0.05)
+    assert crash[0]["delay_s"] == pytest.approx(
+        policy.backoff_delay(0, 0), abs=5e-4)
+    assert events_of(res, "restart")  # chief recovery was recorded
+
+
+def test_coordinator_preempted_resumes_immediately():
+    res = run_fleet(1, builder=stub_builder(crash_rc=75, crash_step=3,
+                                            crash_times=1, done_step=6))
+    assert res.ok and res.restarts == 1
+    exits = [e for e in events_of(res, "worker_exit") if e["rc"] == 75]
+    assert len(exits) == 1 and exits[0]["action"] == "resume"
+    assert "delay_s" not in exits[0]  # no backoff for a boundary drain
+
+
+def test_coordinator_escalates_on_nonfinite():
+    res = run_fleet(1, builder=stub_builder(crash_rc=77, crash_step=3,
+                                            crash_times=1, done_step=6))
+    assert not res.ok and res.exit_code == 77
+    assert events_of(res, "worker_exit")[0]["action"] == "escalate"
+
+
+def test_coordinator_budget_exhausted_scales_down():
+    res = run_fleet(
+        2, builder=stub_builder(crash_rc=1, crash_step=3, crash_times=1,
+                                done_step=6),
+        policy=RestartPolicy(max_restarts=0, backoff_base=0.01), min_world=1)
+    assert res.ok
+    assert res.world_history == [2, 1]
+    resizes = events_of(res, "resize")
+    assert len(resizes) == 1 and resizes[0]["world_to"] == 1
+    assert events_of(res, "worker_exit")[0]["action"] == "give_up"
+
+
+def test_coordinator_budget_exhausted_at_min_world_halts():
+    res = run_fleet(
+        1, builder=stub_builder(crash_rc=1, crash_step=3, crash_times=9,
+                                done_step=6),
+        policy=RestartPolicy(max_restarts=0, backoff_base=0.01), min_world=1)
+    assert not res.ok and res.exit_code == 1
+    assert "min_world" in res.reason
+
+
+def test_coordinator_scales_up_at_step():
+    res = run_fleet(1, builder=stub_builder(done_step=30),
+                    target_world=2, scale_up_at=3)
+    assert res.ok
+    assert res.world_history == [1, 2]
+    up = events_of(res, "resize")
+    assert len(up) == 1 and up[0]["reason"] == "scale_up" \
+        and up[0]["world_to"] == 2
+
+
+def test_coordinator_injects_worker_lost():
+    plan = FaultPlan.parse(["worker_lost@3:1"], seed=0)
+    res = run_fleet(2, builder=stub_builder(done_step=30), fault_plan=plan)
+    assert res.ok and res.restarts == 1
+    lost = events_of(res, "worker_lost")
+    assert len(lost) == 1 and lost[0]["rank"] == 1
+    crash = [e for e in events_of(res, "worker_exit") if e["rank"] == 1]
+    assert crash and crash[0]["rc"] == -signal.SIGKILL
+    assert crash[0]["action"] == "restart"
+
+
+def test_coordinator_injects_preempt_seed_pure_victim():
+    plan = FaultPlan.parse(["preempt@3:0.5"], seed=11)
+    res = run_fleet(2, builder=stub_builder(done_step=30), fault_plan=plan)
+    assert res.ok
+    pre = events_of(res, "preempt")
+    assert len(pre) == 1
+    # the actuated victim is exactly the plan's pure (seed, step) choice
+    assert pre[0]["rank"] == plan.victim_rank(plan.fleet_faults()[0], 2)
+    # the victim drained (75) and was resumed without a budget charge
+    exits = [e for e in events_of(res, "worker_exit")
+             if e["rank"] == pre[0]["rank"]]
+    assert exits and exits[0]["rc"] == 75 and exits[0]["action"] == "resume"

@@ -292,6 +292,60 @@ def test_quarantined_steps_stay_invisible():
         shutil.rmtree(d)
 
 
+def test_latest_valid_under_concurrent_writers():
+    """Several writers saving interleaved steps into ONE directory (an elastic
+    fleet's old and relaunched chief overlapping at a drain) — the atomic-
+    rename invariant, asserted directly *while the race runs*: any step a
+    reader can see (manifest present) is complete and CRC-valid, because a
+    step only ever appears via rename of a fully-fsynced staging dir."""
+    d = tempfile.mkdtemp()
+    try:
+        all_steps = list(range(1, 25))
+        writers = [CheckpointManager(d, keep=100) for _ in range(3)]
+        threads = [threading.Thread(
+            target=lambda m=m, i=i: [m.save(s, _tree(s), blocking=True)
+                                     for s in all_steps[i::3]])
+            for i, m in enumerate(writers)]
+        reader = CheckpointManager(d, keep=100)
+        for t in threads:
+            t.start()
+        while any(t.is_alive() for t in threads):
+            for s in reader.steps():      # visible ⇒ verifiable, mid-race
+                assert reader.verify(s), f"step_{s} visible but torn"
+        for t in threads:
+            t.join()
+        # every step landed intact; latest_valid walks cleanly to the head
+        assert reader.steps() == all_steps
+        assert reader.latest_valid() == 24
+        assert not [f for f in os.listdir(d) if ".tmp" in f], "staging leaked"
+        _assert_trees_equal(reader.restore(24, _tree(0)), _tree(24))
+    finally:
+        shutil.rmtree(d)
+
+
+def test_same_step_writer_race_is_bit_safe():
+    """Two managers racing the SAME boundary step (restart overlap): unique
+    per-writer staging dirs mean neither tears the other; whichever writer
+    wins, the published step verifies and restores to the boundary state."""
+    d = tempfile.mkdtemp()
+    try:
+        mgrs = [CheckpointManager(d, keep=5) for _ in range(2)]
+        for _ in range(10):  # many rounds to actually interleave the rename
+            threads = [threading.Thread(
+                target=m.save, args=(8, _tree(8)),
+                kwargs={"blocking": True}) for m in mgrs]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert mgrs[0].verify(8)
+        assert mgrs[0].latest_valid() == 8
+        _assert_trees_equal(mgrs[0].restore(8, _tree(0)), _tree(8))
+        assert not [f for f in os.listdir(d) if ".tmp" in f], "staging leaked"
+    finally:
+        shutil.rmtree(d)
+
+
 # ------------------------------------------------- numerics-guard rollback
 
 @pytest.fixture(scope="module")
@@ -428,3 +482,37 @@ def test_graceful_shutdown_request_without_signal():
         assert not gs.requested
         gs.request()
         assert gs.requested
+
+
+def test_graceful_shutdown_sigint_drains_then_second_reraises():
+    """First SIGINT = drain request (no KeyboardInterrupt); a second SIGINT
+    while draining restores the previous handler and re-raises through it —
+    and only SIGINT's shield drops, the SIGTERM one stays up."""
+    import signal
+    from repro.robustness.harness import GracefulShutdown
+    prev_int = signal.getsignal(signal.SIGINT)
+    gs = GracefulShutdown()
+    try:
+        os.kill(os.getpid(), signal.SIGINT)
+        time.sleep(0.05)
+        assert gs.requested  # drained, not killed
+        with pytest.raises(KeyboardInterrupt):
+            os.kill(os.getpid(), signal.SIGINT)
+            time.sleep(0.05)
+        # the re-raise path restored the previous SIGINT disposition...
+        assert signal.getsignal(signal.SIGINT) == prev_int
+        # ...while SIGTERM is still shielded by the drain handler
+        assert signal.getsignal(signal.SIGTERM) == gs._handler
+    finally:
+        gs.uninstall()
+    assert signal.getsignal(signal.SIGTERM) != gs._handler
+
+
+def test_graceful_shutdown_handles_both_drain_signals():
+    import signal
+    from repro.robustness.harness import GracefulShutdown
+    with GracefulShutdown() as gs:
+        assert signal.getsignal(signal.SIGTERM) == gs._handler
+        assert signal.getsignal(signal.SIGINT) == gs._handler
+    assert signal.getsignal(signal.SIGTERM) != gs._handler
+    assert signal.getsignal(signal.SIGINT) != gs._handler

@@ -1,0 +1,177 @@
+"""Serving-cell benchmark: continuous batching vs the fixed-batch barrier.
+
+A seeded synthetic open-loop arrival sweep (DESIGN.md §5) over ≥2 arrival
+rates × ≥2 archs (one SWA config) runs the same workload through
+
+1. the **continuous engine** (``repro.serve.ServeEngine``: paged KV pool,
+   mid-flight slot refill, K-step scan-fused decode blocks), and
+2. the **fixed-batch baseline**: requests grouped into arrival-order batches
+   of the same ``max_slots`` budget, each batch decoding to its
+   generation-length barrier (every sequence pays for the longest one) with
+   the *same* K-step block fusion — so the comparison isolates the batching
+   policy, not host dispatch overhead.
+
+Both are jit-warmed before timing.  Emits ``BENCH_serve.json`` (repo root and
+``artifacts/serve/``) with tok/s-per-chip and p50/p99 request latency per
+(arch, rate) point, and asserts continuous ≥ fixed-batch throughput on every
+point.
+
+Run:  PYTHONPATH=src:. python benchmarks/bench_serve.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from collections import defaultdict
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+ART = os.path.join(ROOT, "artifacts", "serve")
+
+ARCHS = ["qwen3-0.6b", "mixtral-8x22b"]   # dense causal + SWA(16) MoE
+# Open-loop arrival rates in requests per decode block.  Both points offer at
+# least as much load as the cell can carry (a throughput benchmark measures
+# the policy at saturation; light-load behavior shows up in the latency
+# percentiles, not tok/s).
+RATES = [2.0, 8.0]
+N_REQUESTS = 24
+MAX_SLOTS = 4
+PROMPT_LENS = [8, 16]
+# Wide generation-length spread: the fixed-batch barrier makes every sequence
+# pay for the longest one in its batch (~1.8x the requested row-steps at this
+# range), while continuous batching only pays the ≤ BLOCK_STEPS-1
+# over-generation of its block quantization.  Long lifetimes also amortize
+# per-admission work (prefill + page write) over many decode blocks.
+MAX_NEW = (8, 96)
+BLOCK_STEPS = 4
+PAGE_SIZE = 8
+SEED = 0
+
+
+def _max_len(cfg) -> int:
+    return max(PROMPT_LENS) + MAX_NEW[1]
+
+
+def run_continuous(params, cfg, reqs):
+    from repro.serve import ServeEngine
+    eng = ServeEngine(params, cfg, max_slots=MAX_SLOTS, max_len=_max_len(cfg),
+                      page_size=PAGE_SIZE, block_steps=BLOCK_STEPS)
+    best = None
+    for _ in range(2):                    # best-of-2 to damp host jitter
+        _, m = eng.run(reqs)              # warms prefill/decode internally
+        if best is None or m["tok_s"] > best["tok_s"]:
+            best = m
+    return best
+
+
+def run_fixed_batch(params, cfg, reqs):
+    """Arrival-order batches of MAX_SLOTS (grouped by prompt length — the
+    fixed loop cannot mix lengths in one prefill), each decoded to the batch
+    max ``max_new`` barrier."""
+    import jax.numpy as jnp
+    from repro.serve.engine import fixed_batch_generate, make_fixed_batch_fns
+
+    groups = defaultdict(list)
+    for r in reqs:                        # already arrival-sorted by workload
+        groups[len(r.prompt)].append(r)
+    batches = []
+    for _, rs in sorted(groups.items()):
+        batches.extend(rs[i:i + MAX_SLOTS] for i in range(0, len(rs), MAX_SLOTS))
+
+    fns = make_fixed_batch_fns(cfg, _max_len(cfg), BLOCK_STEPS)
+
+    def sweep():
+        wall = 0.0
+        tokens = 0
+        for batch in batches:
+            prompts = jnp.asarray([list(r.prompt) for r in batch], jnp.int32)
+            barrier = max(r.max_new for r in batch)
+            _, tp, td = fixed_batch_generate(
+                params, cfg, prompts, barrier, max_len=_max_len(cfg),
+                block_steps=BLOCK_STEPS, fns=fns)
+            wall += tp + td
+            tokens += sum(r.max_new for r in batch)   # only requested tokens
+        return tokens, wall
+
+    sweep()                               # warm every batch shape
+    tokens, wall = sweep()
+    wall = min(wall, sweep()[1])          # best-of-2 to damp host jitter
+    return tokens, wall
+
+
+def run() -> dict:
+    import jax
+    import repro.configs as configs
+    from repro.models import model
+    from repro.serve import synthetic_workload
+
+    n_chips = jax.device_count()
+    points = []
+    for arch in ARCHS:
+        cfg = configs.reduced(arch)
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        for rate in RATES:
+            reqs = synthetic_workload(seed=SEED, n_requests=N_REQUESTS,
+                                      rate=rate, prompt_lens=PROMPT_LENS,
+                                      vocab=cfg.vocab, max_new_range=MAX_NEW)
+            m = run_continuous(params, cfg, reqs)
+            fb_tokens, fb_wall = run_fixed_batch(params, cfg, reqs)
+            fb_tok_s = fb_tokens / max(fb_wall, 1e-9)
+            point = {
+                "arch": arch,
+                "swa_window": cfg.swa_window,
+                "rate_req_per_block": rate,
+                "n_requests": N_REQUESTS,
+                "max_slots": MAX_SLOTS,
+                "continuous": {
+                    "tok_s": round(m["tok_s"], 2),
+                    "tok_s_per_chip": round(m["tok_s_per_chip"], 2),
+                    "total_new_tokens": m["total_new_tokens"],
+                    "run_wall_s": round(m["run_wall_s"], 4),
+                    "prefill_latency_s": m["prefill_latency_s"],
+                    "request_latency_s": m["request_latency_s"],
+                },
+                "fixed_batch": {
+                    "tok_s": round(fb_tok_s, 2),
+                    "tok_s_per_chip": round(fb_tok_s / n_chips, 2),
+                    "total_new_tokens": fb_tokens,
+                    "run_wall_s": round(fb_wall, 4),
+                },
+                "speedup": round(m["tok_s"] / max(fb_tok_s, 1e-9), 3),
+            }
+            points.append(point)
+            print(f"{arch} rate={rate}: continuous {m['tok_s']:.1f} tok/s "
+                  f"vs fixed-batch {fb_tok_s:.1f} tok/s "
+                  f"({point['speedup']}x), p99 latency "
+                  f"{m['request_latency_s']['p99'] * 1e3:.0f}ms", flush=True)
+
+    losing = [p for p in points if p["speedup"] < 1.0]
+    assert not losing, (
+        "continuous batching lost to the fixed-batch barrier on: "
+        + ", ".join(f"{p['arch']}@{p['rate_req_per_block']}"
+                    f" ({p['speedup']}x)" for p in losing))
+    return {
+        "geometry": {"max_slots": MAX_SLOTS, "block_steps": BLOCK_STEPS,
+                     "page_size": PAGE_SIZE, "prompt_lens": PROMPT_LENS,
+                     "max_new_range": list(MAX_NEW), "seed": SEED,
+                     "n_chips": n_chips},
+        "points": points,
+    }
+
+
+def main():
+    result = run()
+    os.makedirs(ART, exist_ok=True)
+    for path in (os.path.join(ROOT, "BENCH_serve.json"),
+                 os.path.join(ART, "BENCH_serve.json")):
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+            f.write("\n")
+    print(json.dumps(result, indent=1))
+
+
+if __name__ == "__main__":
+    main()

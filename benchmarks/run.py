@@ -53,6 +53,14 @@ def main() -> None:
         for r in bench_roofline.run():
             emit(r["name"], r["us_per_call"], r["derived"])
 
+    if want("serve"):
+        from benchmarks import bench_serve
+        for p in bench_serve.run()["points"]:
+            emit(f"serve/{p['arch']}/rate={p['rate_req_per_block']}", 0,
+                 f"tok_s={p['continuous']['tok_s']} "
+                 f"vs_fixed={p['speedup']}x "
+                 f"p99_s={p['continuous']['request_latency_s']['p99']:.3f}")
+
 
 if __name__ == "__main__":
     main()

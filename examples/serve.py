@@ -2,6 +2,13 @@
 KV cache (rolling window for SWA archs, recurrent state for SSM/xLSTM).
 
     PYTHONPATH=src python examples/serve.py --arch mixtral-8x22b   # reduced cfg
+    PYTHONPATH=src python examples/serve.py --continuous           # paged engine
+
+The default mode is the fixed-batch loop (one prefill, decode to a shared
+generation-length barrier); ``--continuous`` runs the same prompts through the
+paged continuous-batching engine (``repro.serve``) instead.  Both warm up jit
+before timing and report prefill latency separately from decode throughput —
+compile time is never in the numbers.
 """
 import argparse
 import os
@@ -21,8 +28,8 @@ def generate(params, cfg, prompts, max_new: int, temperature: float = 0.0,
              seed: int = 0):
     B, S = prompts.shape
     max_len = S + max_new
-    logits, cache = jax.jit(
-        lambda p, t: model.prefill(p, cfg, {"tokens": t}, max_len))(params, prompts)
+    prefill = jax.jit(
+        lambda p, t: model.prefill(p, cfg, {"tokens": t}, max_len))
 
     @jax.jit
     def step(params, cache, tok, key):
@@ -31,14 +38,25 @@ def generate(params, cfg, prompts, max_new: int, temperature: float = 0.0,
                jax.random.categorical(key, logits[:, -1] / temperature))
         return cache, nxt[:, None].astype(jnp.int32)
 
-    key = jax.random.PRNGKey(seed)
-    tok = logits[:, -1:].argmax(-1).astype(jnp.int32)
-    out = [tok]
-    for i in range(max_new - 1):
-        key, sub = jax.random.split(key)
-        cache, tok = step(params, cache, tok, sub)
-        out.append(tok)
-    return jnp.concatenate(out, axis=1)
+    def run():
+        t0 = time.perf_counter()
+        logits, cache = prefill(params, prompts)
+        tok = logits[:, -1:].argmax(-1).astype(jnp.int32)
+        tok.block_until_ready()
+        t_prefill = time.perf_counter() - t0
+        key = jax.random.PRNGKey(seed)
+        out = [tok]
+        t0 = time.perf_counter()
+        for _ in range(max_new - 1):
+            key, sub = jax.random.split(key)
+            cache, tok = step(params, cache, tok, sub)
+            out.append(tok)
+        toks = jnp.concatenate(out, axis=1)
+        toks.block_until_ready()
+        return toks, t_prefill, time.perf_counter() - t0
+
+    run()                     # warm up prefill + decode step (compile)
+    return run()              # timed
 
 
 def main():
@@ -47,17 +65,39 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the paged continuous-batching engine")
     args = ap.parse_args()
 
     cfg = configs.reduced(args.arch)
     params = model.init_params(jax.random.PRNGKey(0), cfg)
+
+    if args.continuous:
+        from repro.serve import ServeEngine, synthetic_workload
+        if not model.supports_paged(cfg):
+            sys.exit(f"--continuous needs the transformer serving path; "
+                     f"{args.arch} is family {cfg.family}")
+        reqs = synthetic_workload(
+            seed=0, n_requests=4 * args.batch, rate=2.0,
+            prompt_lens=[args.prompt_len], vocab=cfg.vocab,
+            max_new_range=(args.max_new // 2, args.max_new))
+        eng = ServeEngine(params, cfg, max_slots=args.batch,
+                          max_len=args.prompt_len + args.max_new)
+        streams, m = eng.run(reqs)
+        print(f"arch={cfg.name} continuous: {m['completed']} requests, "
+              f"{m['total_new_tokens']} tokens in {m['run_wall_s']:.2f}s "
+              f"({m['tok_s']:.1f} tok/s, "
+              f"p99 latency {m['request_latency_s']['p99'] * 1e3:.0f}ms)")
+        print(f"prefill latency p50 {m['prefill_latency_s']['p50'] * 1e3:.1f}ms")
+        return
+
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0, cfg.vocab)
-    t0 = time.perf_counter()
-    toks = generate(params, cfg, prompts, args.max_new)
-    dt = time.perf_counter() - t0
-    print(f"arch={cfg.name} generated {toks.shape} in {dt:.2f}s "
-          f"({args.batch * args.max_new / dt:.1f} tok/s incl. compile)")
+    toks, t_prefill, t_decode = generate(params, cfg, prompts, args.max_new)
+    n_decode = args.batch * (args.max_new - 1)
+    print(f"arch={cfg.name} generated {toks.shape}: "
+          f"prefill {t_prefill * 1e3:.1f}ms, "
+          f"decode {n_decode / t_decode:.1f} tok/s (compile excluded)")
     print(toks[:2])
 
 

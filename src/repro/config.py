@@ -329,7 +329,7 @@ SHAPES: Dict[str, ShapeCell] = {
 
 
 def shape_applicable(cfg: ModelConfig, shape: ShapeCell) -> Tuple[bool, str]:
-    """Whether a (arch, shape) cell runs; see DESIGN.md §5 for the skip policy."""
+    """Whether a (arch, shape) cell runs; see DESIGN.md §5b for the skip policy."""
     if shape.name == "long_500k" and not cfg.subquadratic:
         return False, "long_500k needs sub-quadratic attention; pure full-attention arch"
     return True, ""

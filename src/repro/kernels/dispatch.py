@@ -60,7 +60,15 @@ from repro.distributed.sharding import (ATTN_KV_AXES, ATTN_MASK_AXES,
                                         active_rules, logical_to_spec,
                                         mesh_axis_size)
 from repro.kernels import ops
+from repro.kernels.decode_attention import (paged_decode_attention,
+                                            paged_decode_ref)
 from repro.kernels.flash_attention import flash_attention
+
+#: logical axes of the paged KV pool (N, page_size, KV, hd) — the pool has no
+#: batch dim (slots of one data shard share it), so only kv_heads can shard.
+PAGED_POOL_AXES = (None, None, "kv_heads", None)
+#: per-slot page table (B, P) / valid counts (B,) follow the batch axis.
+PAGED_TABLE_AXES = ("batch", None)
 
 BACKEND_CHOICES = ("pallas", "jnp", "auto")
 
@@ -436,6 +444,72 @@ def fused_flash_attention(q, k, v, *, causal: bool, window: int = 0,
     return shard_map(local, mesh=mesh,
                      in_specs=(qspec, kvspec, kvspec, mspec),
                      out_specs=qspec, check_rep=False)(q, k, v, kv_valid)
+
+
+def paged_decode_restriction(q_shape, pages_shape, dtype) -> Optional[str]:
+    """Why the split-KV kernel cannot take this paged decode call — None when
+    it can.  Shape-static, so routing never recompiles the decode block."""
+    if len(q_shape) != 5 or len(pages_shape) != 4:
+        return (f"unexpected layout q{tuple(q_shape)} / pages"
+                f"{tuple(pages_shape)} (want (B,1,KV,G,hd) / (N,ps,KV,hd))")
+    if q_shape[1] != 1:
+        return f"decode expects a single query position, got S={q_shape[1]}"
+    if not jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        return f"non-float dtype {jnp.dtype(dtype).name}"
+    hd, ps = q_shape[-1], pages_shape[1]
+    if hd > MAX_FLASH_HEAD_DIM:
+        return (f"head_dim {hd} exceeds the kernel VMEM tile budget "
+                f"({MAX_FLASH_HEAD_DIM})")
+    if hd % 8 != 0:
+        return f"head_dim {hd} not a multiple of the 8-sublane layout"
+    if ps % 8 != 0:
+        return f"page_size {ps} not a multiple of the 8-sublane layout"
+    return None
+
+
+def paged_decode_ok(q, k_pages, backend: KernelBackend) -> bool:
+    """Dispatch predicate for one paged decode-attention call; warns once per
+    reason when pallas was forced but the call falls back to the jnp gather."""
+    if not backend.use_pallas:
+        return False
+    reason = paged_decode_restriction(q.shape, k_pages.shape, q.dtype)
+    if reason is not None:
+        _warn_forced_attention_fallback(backend, reason)
+        return False
+    return True
+
+
+def fused_paged_decode(q, k_pages, v_pages, page_table, valid_count, *,
+                       backend: KernelBackend, pages_per_split: int = 0):
+    """The split-KV paged decode kernel, shard_map-wrapped under a mesh.
+
+    Decode attention is independent per (slot, KV head): q/page_table/
+    valid_count shard on batch -> data, the page pool on kv_heads -> model
+    (each data shard keeps a full pool replica for its slots — the pool has
+    no batch dim).  Axes that don't divide are dropped by ``logical_to_spec``
+    exactly as in :func:`fused_flash_attention`.
+    """
+    kw = dict(pages_per_split=pages_per_split, interpret=backend.interpret)
+    if not backend.sharded:
+        return paged_decode_attention(q, k_pages, v_pages, page_table,
+                                      valid_count, **kw)
+    mesh = backend.mesh
+    rules = active_rules()
+    qspec = logical_to_spec(ATTN_Q_AXES, shape=q.shape, mesh=mesh, rules=rules)
+    pspec = logical_to_spec(PAGED_POOL_AXES, shape=k_pages.shape, mesh=mesh,
+                            rules=rules)
+    tspec = logical_to_spec(PAGED_TABLE_AXES, shape=page_table.shape,
+                            mesh=mesh, rules=rules)
+    vspec = logical_to_spec(("batch",), shape=valid_count.shape, mesh=mesh,
+                            rules=rules)
+
+    def local(q_l, k_l, v_l, t_l, c_l):
+        return paged_decode_attention(q_l, k_l, v_l, t_l, c_l, **kw)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(qspec, pspec, pspec, tspec, vspec),
+                     out_specs=qspec, check_rep=False)(
+                         q, k_pages, v_pages, page_table, valid_count)
 
 
 def moments_fusable(m, v, p, optimizer: str) -> bool:

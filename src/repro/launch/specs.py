@@ -203,3 +203,53 @@ def serve_cell_specs(cfg: ModelConfig, cell: ShapeCell, mesh, rules=None):
     return (with_sharding(params_sds, params_sh), params_sh,
             jax.ShapeDtypeStruct(tok_sds.shape, tok_sds.dtype, sharding=tok_sh),
             tok_sh, with_sharding(cache_sds, cache_sh), cache_sh)
+
+
+def _paged_pool_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    """Logical axes of the paged serving pool (DESIGN.md §5).
+
+    The page pool has no batch dim — slots of one data shard share it — so
+    only the KV-head dim can shard (kernels/dispatch.py::PAGED_POOL_AXES with
+    the leading stacked-layer axis); page tables and lengths follow the slot
+    (batch) axis like decode tokens.
+    """
+    from repro.kernels.dispatch import PAGED_POOL_AXES, PAGED_TABLE_AXES
+    axes: Dict[str, Any] = {
+        "k_pages": (None,) + PAGED_POOL_AXES,
+        "v_pages": (None,) + PAGED_POOL_AXES,
+        "page_table": PAGED_TABLE_AXES,
+        "lengths": ("batch",),
+    }
+    if cfg.ssm is not None:
+        axes["ssm_h"] = (None, "batch", "ssm_inner", None)
+        axes["ssm_conv"] = (None, "batch", None, "ssm_inner")
+    return axes
+
+
+def paged_serve_cell_specs(cfg: ModelConfig, cell: ShapeCell, mesh, *,
+                           page_size: int = 16, rules=None):
+    """Sharded SDS for the paged decode cell: (params, tokens, pool).
+
+    Same contract as the decode branch of :func:`serve_cell_specs` with the
+    contiguous cache replaced by the page pool; ``cell.global_batch`` is the
+    number of decode slots and ``cell.seq_len`` the per-slot max length.
+    """
+    if not model.supports_paged(cfg):
+        raise ValueError(f"family {cfg.family} has no paged serving path")
+    rules = rules or rules_for(mesh)
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(lambda k: model.init_params(k, cfg), key)
+    msize = model_axis_size(mesh)
+    params_sh = _shard_tree(params_sds, model.param_logical_axes(cfg, msize),
+                            mesh, rules)
+    B = cell.global_batch
+    pool_sds = jax.eval_shape(
+        lambda: model.init_paged_pool(cfg, B, cell.seq_len, page_size))
+    pool_sh = _shard_tree(pool_sds, _paged_pool_axes(cfg), mesh, rules)
+    tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, logical_to_spec(("batch", None),
+                                                 shape=(B, 1), mesh=mesh,
+                                                 rules=rules))
+    return (with_sharding(params_sds, params_sh), params_sh,
+            jax.ShapeDtypeStruct(tok_sds.shape, tok_sds.dtype, sharding=tok_sh),
+            tok_sh, with_sharding(pool_sds, pool_sh), pool_sh)

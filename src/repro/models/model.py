@@ -75,3 +75,23 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], max_len: int):
 
 def decode_step(params, cfg: ModelConfig, cache, tokens):
     return _mod(cfg).decode_step(params, cfg, cache, tokens)
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Whether this family has the paged serving path (the stacked-layer
+    transformer; encdec needs cross-attention state, xlstm has no KV cache)."""
+    return _mod(cfg) is transformer
+
+
+def init_paged_pool(cfg: ModelConfig, max_slots: int, max_len: int,
+                    page_size: int, n_pages: int = 0):
+    assert supports_paged(cfg), cfg.family
+    return transformer.init_paged_pool(cfg, max_slots, max_len, page_size,
+                                       n_pages)
+
+
+def decode_step_paged(params, cfg: ModelConfig, pool, tokens, *, active=None,
+                      attn_args=None):
+    assert supports_paged(cfg), cfg.family
+    return transformer.decode_step_paged(params, cfg, pool, tokens,
+                                         active=active, attn_args=attn_args)

@@ -386,3 +386,181 @@ def decode_step(params, cfg: ModelConfig, cache, tokens):
     if cfg.ssm is not None:
         new_cache["ssm_h"], new_cache["ssm_conv"] = ys["ssm_h"], ys["ssm_conv"]
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Serving: paged KV pool (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def paged_cache_len(cfg: ModelConfig, max_len: int, page_size: int) -> int:
+    """Per-slot logical cache extent, rounded up to whole pages.
+
+    For SWA archs this must be the window itself (the ring invariant
+    ``slot = pos % C`` only matches the contiguous path when C == window), so
+    ``page_size`` must divide the window; causal caches just round up and the
+    per-slot valid count masks the padded tail slots.
+    """
+    C = cache_len(cfg, max_len)
+    if cfg.swa_window and C == cfg.swa_window and C % page_size:
+        raise ValueError(
+            f"page_size {page_size} must divide the sliding window {C} "
+            f"(ring slot = pos % C needs whole pages)")
+    return -(-C // page_size) * page_size
+
+
+def init_paged_pool(cfg: ModelConfig, max_slots: int, max_len: int,
+                    page_size: int, n_pages: int = 0):
+    """Device state for the paged serving cell: a global page pool shared by
+    all decode slots plus per-slot page tables and lengths.
+
+    Page 0 is the *trash page*: free slots' table rows point at it, so their
+    (masked, discarded) decode writes never touch a live sequence's pages.
+    The default pool size budgets every slot full plus the trash page;
+    callers may oversubscribe/undersubscribe via ``n_pages``.
+    """
+    C = paged_cache_len(cfg, max_len, page_size)
+    pps = C // page_size
+    n_pages = n_pages or (1 + max_slots * pps)
+    L, hd, KV = cfg.n_layers, cfg.resolved_head_dim, cfg.n_kv_heads
+    pool = {
+        "k_pages": jnp.zeros((L, n_pages, page_size, KV, hd), cfg.dtype),
+        "v_pages": jnp.zeros((L, n_pages, page_size, KV, hd), cfg.dtype),
+        "page_table": jnp.zeros((max_slots, pps), jnp.int32),
+        "lengths": jnp.zeros((max_slots,), jnp.int32),
+    }
+    if cfg.ssm is not None:
+        di = cfg.ssm.expand * cfg.d_model
+        pool["ssm_h"] = jnp.zeros((L, max_slots, di, cfg.ssm.state_dim),
+                                  jnp.float32)
+        pool["ssm_conv"] = jnp.zeros((L, max_slots, cfg.ssm.conv_width - 1, di),
+                                     cfg.dtype)
+    return pool
+
+
+def write_prefill_pages(pool, row_of_slot, table_rows, ys, lengths):
+    """Scatter a *batch* of prefilled sequences into their allocated pages.
+
+    ``ys`` is the ``collect_cache`` tree from :func:`forward` over a (B, S)
+    prompt batch; row ``i`` carries a true prompt of ``lengths[i]`` tokens
+    (rows may be padding — give them ``lengths[i] == 0`` and a zero
+    ``table_rows[i]`` and every write they make lands on the trash page).
+    ``row_of_slot`` maps each pool slot to its batch row (−1 = slot
+    untouched), so one call admits a whole prefill group with fixed shapes —
+    one jit entry per prompt length regardless of group size.
+
+    Token ``t`` lands at ring slot ``t % C``: for causal prompts (S <= C)
+    that is the contiguous layout; for SWA prompts longer than the window it
+    reproduces exactly the rolled ring the contiguous :func:`prefill` builds.
+    """
+    k, v = ys["k"], ys["v"]                          # (L, B, S, KV, hd)
+    S = k.shape[2]
+    ps = pool["k_pages"].shape[2]
+    C = table_rows.shape[1] * ps
+    t = jnp.arange(S)
+    live = (t[None, :] < lengths[:, None]) & (t[None, :] >= lengths[:, None] - C)
+    slotpos = t % C
+    phys = jnp.where(live, table_rows[:, slotpos // ps], 0)      # (B, S)
+    off = slotpos % ps
+    sel = row_of_slot >= 0
+    safe = jnp.maximum(row_of_slot, 0)
+    pool = dict(pool)
+    pool["k_pages"] = pool["k_pages"].at[:, phys, off].set(k)
+    pool["v_pages"] = pool["v_pages"].at[:, phys, off].set(v)
+    pool["page_table"] = jnp.where(sel[:, None], table_rows[safe],
+                                   pool["page_table"])
+    pool["lengths"] = jnp.where(sel, lengths[safe], pool["lengths"])
+    if "ssm_h" in pool:
+        pool["ssm_h"] = jnp.where(sel[None, :, None, None],
+                                  ys["ssm_h"][:, safe], pool["ssm_h"])
+        pool["ssm_conv"] = jnp.where(sel[None, :, None, None],
+                                     ys["ssm_conv"][:, safe], pool["ssm_conv"])
+    return pool
+
+
+def reset_slots(pool, mask):
+    """Point freed slots (``mask`` (B,) bool) back at the trash page so their
+    idle decode writes can never corrupt pages reallocated to new sequences."""
+    pool = dict(pool)
+    pool["page_table"] = jnp.where(mask[:, None], 0, pool["page_table"])
+    pool["lengths"] = jnp.where(mask, 0, pool["lengths"])
+    return pool
+
+
+def decode_step_paged(params, cfg: ModelConfig, pool, tokens, *, active=None,
+                      attn_args: Optional[Dict[str, Any]] = None):
+    """tokens: (B, 1) over the B decode slots.  One paged decode step.
+
+    The paged counterpart of :func:`decode_step` with *per-slot* positions
+    (``pool["lengths"]``), so sequences at different depths decode in one
+    batch — the continuous-batching substrate.  Writes land at ring slot
+    ``lengths % C`` (SWA) / ``min(lengths, C-1)`` (causal) through the page
+    table; attention runs either through the Pallas split-KV kernel
+    (``kernels/decode_attention.py``, routed via ``dispatch.paged_decode_ok``)
+    or the jnp gather path, which is bit-identical to the contiguous
+    :func:`decode_step` at equal positions.  ``active`` (B,) gates the length
+    increment; inactive slots write to the trash page and their outputs are
+    host-discarded.
+    """
+    from repro.kernels import dispatch as _dispatch
+    args = attn_call_args(cfg, attn_args)
+    backend = _dispatch.normalize_backend(args.get("backend"))
+    B = tokens.shape[0]
+    lengths = pool["lengths"]
+    x = params["embed"].astype(cfg.dtype)[tokens]              # (B, 1, D)
+    positions = lengths[:, None]
+    table = pool["page_table"]
+    P, ps = table.shape[1], pool["k_pages"].shape[2]
+    C = P * ps
+    slot = lengths % C if cfg.swa_window else jnp.minimum(lengths, C - 1)
+    if active is None:
+        active = jnp.ones((B,), bool)
+    phys = jnp.take_along_axis(table, (slot // ps)[:, None], axis=1)[:, 0]
+    # inactive slots scatter to the trash page: a retired slot's pages can be
+    # handed to a new request without an intervening reset dispatch
+    phys = jnp.where(active, phys, 0)
+    off = slot % ps
+    vcount = jnp.minimum(lengths + 1, C)
+
+    xs = {"lp": params["layers"], "k": pool["k_pages"], "v": pool["v_pages"]}
+    if cfg.ssm is not None:
+        xs["ssm_h"], xs["ssm_conv"] = pool["ssm_h"], pool["ssm_conv"]
+
+    def body(x, layer_in):
+        lp = jax.tree.map(lambda a: a.astype(cfg.dtype)
+                          if jnp.issubdtype(a.dtype, jnp.floating) else a,
+                          layer_in["lp"])
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k_new, v_new = _qkv(h, lp, cfg, positions)
+        kp = layer_in["k"].at[phys, off].set(k_new[:, 0])
+        vp = layer_in["v"].at[phys, off].set(v_new[:, 0])
+        if _dispatch.paged_decode_ok(q, kp, backend):
+            o = _dispatch.fused_paged_decode(q, kp, vp, table, vcount,
+                                             backend=backend)
+        else:
+            o = attn_lib.decode_attention(
+                q, _gather(kp), _gather(vp), length=lengths + 1,
+                window=cfg.swa_window)
+        a_out = o.reshape(B, 1, cfg.q_dim) @ lp["wo"]
+        ys = {"k": kp, "v": vp}
+        if cfg.ssm is not None:
+            m_out, (h2, conv2) = ssm_lib.mamba_head(
+                h, lp, cfg, state=(layer_in["ssm_h"], layer_in["ssm_conv"]))
+            a_out = (a_out + m_out) * 0.5
+            ys["ssm_h"], ys["ssm_conv"] = h2, conv2
+        x = x + a_out
+        m, _ = mlp_block(x, lp, cfg)
+        return x + m, ys
+
+    def _gather(pages):
+        return pages[table].reshape(B, C, *pages.shape[2:])
+
+    x, ys = jax.lax.scan(body, x, xs)
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype), cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]).astype(cfg.dtype)
+    logits = x @ head
+    new_pool = dict(pool)
+    new_pool["k_pages"], new_pool["v_pages"] = ys["k"], ys["v"]
+    new_pool["lengths"] = lengths + active.astype(jnp.int32)
+    if cfg.ssm is not None:
+        new_pool["ssm_h"], new_pool["ssm_conv"] = ys["ssm_h"], ys["ssm_conv"]
+    return logits, new_pool

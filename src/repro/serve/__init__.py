@@ -1,0 +1,10 @@
+"""Production inference cell (DESIGN.md §5).
+
+``pages``     — host-side page allocator + contiguous<->paged cache adapters.
+``scheduler`` — request admission queue + seeded synthetic open-loop workload.
+``engine``    — continuous-batching serve loop over the paged decode step.
+"""
+from repro.serve.engine import ServeEngine, fixed_batch_generate  # noqa: F401
+from repro.serve.pages import PagePool, pack_cache, unpack_cache  # noqa: F401
+from repro.serve.scheduler import (Request, Scheduler,            # noqa: F401
+                                   synthetic_workload)

@@ -1,0 +1,405 @@
+"""Continuous-batching serve loop over the paged decode step.
+
+The engine owns ``max_slots`` decode slots backed by one paged KV pool.  Each
+iteration of :meth:`ServeEngine.run` is one *tick*:
+
+    poll arrivals -> admit into free slots (prefill) -> launch a K-step
+    decode block -> drain the previous block's tokens while it runs ->
+    retire completed slots (host token counts; no device read needed)
+
+Prefill and decode are disaggregated: each tick's admissible requests are
+grouped by prompt length (SSM archs cannot pad prompts — padding corrupts the
+recurrent state — so each distinct length is its own jit entry) and prefilled
+*together* at a fixed batch width of ``max_slots``, short groups padded with
+dummy rows whose writes land on the trash page.  One jit entry per length,
+one prefill dispatch per group — admission cost does not scale with request
+count.  The collected KV scatters into freshly allocated pages and the slot
+drops into the running decode batch at the next block boundary.  Decode slots
+are refilled mid-flight as sequences finish; there is no generation-length
+barrier.
+
+Host overhead is amortized with the PR 4 idiom: K decode steps are fused into
+one ``lax.scan`` block (one dispatch per K tokens), and the previous block's
+tokens are fetched while the current block runs — completions are detected
+from host-side token *counts*, which advance deterministically by K per
+block, so scheduling never waits on device data.
+
+Determinism: admissions are FIFO by arrival tick, slot choice is
+lowest-index-free, page placement is the LIFO allocator, and decoding is
+greedy argmax — the full token stream of every request is a pure function of
+the workload seed and the engine geometry.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import model, transformer
+from repro.serve.pages import PagePool
+from repro.serve.scheduler import Request, Scheduler
+
+
+def _percentiles(xs: Sequence[float]) -> Dict[str, float]:
+    if not xs:
+        return {"mean": 0.0, "p50": 0.0, "p99": 0.0}
+    a = np.asarray(xs, np.float64)
+    return {"mean": float(a.mean()), "p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99))}
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, max_slots: int,
+                 max_len: int, page_size: int = 8, block_steps: int = 4,
+                 n_pages: int = 0, attn_args: Optional[Dict[str, Any]] = None):
+        assert model.supports_paged(cfg), cfg.family
+        self.params, self.cfg = params, cfg
+        self.max_slots, self.max_len = max_slots, max_len
+        self.page_size, self.block_steps = page_size, block_steps
+        self.attn_args = dict(attn_args or {})
+        self.pool = model.init_paged_pool(cfg, max_slots, max_len, page_size,
+                                          n_pages)
+        self.pages_per_slot = self.pool["page_table"].shape[1]
+        n_pages = self.pool["k_pages"].shape[1]
+        if n_pages < 1 + self.pages_per_slot:
+            raise ValueError(f"pool of {n_pages} pages cannot hold one sequence "
+                             f"({self.pages_per_slot} pages + trash page)")
+        self.alloc = PagePool(n_pages)
+        self.slot_req: List[Optional[Request]] = [None] * max_slots
+        self.slot_pages: List[Optional[List[int]]] = [None] * max_slots
+        self.slot_emitted = [0] * max_slots
+        self._tokens_dev = jnp.zeros((max_slots, 1), jnp.int32)
+        self._prefill_wall_s: Dict[int, float] = {}
+        # cached (B,) active mask; rebuilt only when slot membership changes
+        self._active_dev = jnp.zeros((max_slots,), bool)
+        self._active_dirty = False
+
+        cfg_, args_ = self.cfg, self.attn_args
+
+        def _prefill(params, tokens):
+            logits, _, ys = transformer.forward(params, cfg_, tokens,
+                                                collect_cache=True,
+                                                attn_args=args_)
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), ys
+
+        def _write_group(pool, tokens_dev, row_of_slot, table_rows, ys,
+                         lengths, nxt):
+            pool = transformer.write_prefill_pages(pool, row_of_slot,
+                                                   table_rows, ys, lengths)
+            sel = row_of_slot >= 0
+            safe = jnp.maximum(row_of_slot, 0)
+            tokens_dev = jnp.where(sel, nxt[safe], tokens_dev[:, 0])[:, None]
+            return pool, tokens_dev
+
+        def _block(params, pool, tokens, active):
+            def step(carry, _):
+                pool, tok = carry
+                logits, pool = transformer.decode_step_paged(
+                    params, cfg_, pool, tok, active=active, attn_args=args_)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                return (pool, nxt[:, None]), nxt
+
+            (pool, tok), toks = jax.lax.scan(step, (pool, tokens), None,
+                                             length=self.block_steps)
+            return pool, tok, toks                         # toks: (K, B)
+
+        # one jit each; shape-polymorphic via the jit cache (prefill re-traces
+        # per distinct prompt length × width bucket — keep the workload's
+        # length set small).
+        self._prefill = jax.jit(_prefill)
+        self._write = jax.jit(_write_group, donate_argnums=(0, 1))
+        self._block = jax.jit(_block, donate_argnums=(1, 2))
+
+    # -- admission / retirement -------------------------------------------
+
+    def _admit_group(self, group: List[Tuple[int, Request]]):
+        """Prefill one same-prompt-length group of ``(slot, request)`` pairs
+        in a single batched forward, padded to a width bucket (1 for the
+        common steady-state singleton refill, else ``max_slots``; pad rows
+        carry zero table rows and zero length, so their KV lands on the trash
+        page).  Never blocks: first tokens stay on device and are materialized
+        at the next drain, overlapping admission with the in-flight block."""
+        S = len(group[0][1].prompt)
+        width = 1 if len(group) == 1 else self.max_slots
+        toks_np = np.zeros((width, S), np.int32)
+        table_np = np.zeros((width, self.pages_per_slot), np.int32)
+        len_np = np.zeros((width,), np.int32)
+        row_np = np.full((self.max_slots,), -1, np.int32)
+        for i, (slot, req) in enumerate(group):
+            if not self.cfg.swa_window:
+                assert len(req.prompt) + req.max_new <= self.max_len, (
+                    f"request {req.rid} needs {len(req.prompt) + req.max_new} "
+                    f"slots > max_len {self.max_len}")
+            pages = self.alloc.allocate(self.pages_per_slot)
+            toks_np[i] = req.prompt
+            table_np[i] = pages
+            len_np[i] = S
+            row_np[slot] = i
+            self.slot_req[slot] = req
+            self.slot_pages[slot] = pages
+            self.slot_emitted[slot] = 1
+        self._active_dirty = True
+        nxt, ys = self._prefill(self.params, jnp.asarray(toks_np))
+        self.pool, self._tokens_dev = self._write(
+            self.pool, self._tokens_dev, jnp.asarray(row_np),
+            jnp.asarray(table_np), ys, jnp.asarray(len_np), nxt)
+        # (rid, max_new, batch row) rows + the (width,) first-token array
+        return [(req.rid, req.max_new, i)
+                for i, (_, req) in enumerate(group)], nxt
+
+    def _retire(self, slot: int) -> None:
+        self.alloc.release(self.slot_pages[slot])
+        self.slot_req[slot] = None
+        self.slot_pages[slot] = None
+        self.slot_emitted[slot] = 0
+
+    # -- the serve loop ----------------------------------------------------
+
+    def run(self, requests: Sequence[Request], *, warmup: bool = True):
+        """Serve ``requests`` to completion; returns ``(streams, metrics)``.
+
+        ``streams[rid]`` is the request's full greedy token stream (first
+        token from prefill, the rest from decode blocks, truncated at its
+        ``max_new``).  Metrics cover prefill latency, end-to-end request
+        latency (queue wait included — that is what an open-loop sweep
+        measures), and decode throughput.
+        """
+        if warmup:
+            self._warmup(requests)
+        sched = Scheduler(list(requests))
+        streams: Dict[int, List[int]] = {r.rid: [] for r in requests}
+        enq_wall: Dict[int, float] = {}
+        done_wall: Dict[int, float] = {}
+        # previous block not yet fetched: (meta rows, (K, B) device tokens)
+        pending: Optional[Tuple[list, jax.Array]] = None
+        # admitted groups whose prefill tokens haven't been materialized:
+        # ([(rid, max_new, batch row)], (max_slots,) device tokens)
+        pending_first: List[Tuple[list, jax.Array]] = []
+        total_new = 0
+        blocks = 0
+        tick = 0
+        t0 = time.perf_counter()
+        while True:
+            sched.poll(tick)
+            for r in sched.queue:
+                enq_wall.setdefault(r.rid, time.perf_counter())
+            admitted: List[Tuple[int, Request]] = []
+            while (sched.admissible() is not None and None in self.slot_req
+                   and self.alloc.free_count
+                   >= (len(admitted) + 1) * self.pages_per_slot):
+                req = sched.take()
+                slot = self.slot_req.index(None)
+                self.slot_req[slot] = req          # reserve before grouping
+                enq_wall.setdefault(req.rid, time.perf_counter())
+                admitted.append((slot, req))
+            by_len: Dict[int, List[Tuple[int, Request]]] = {}
+            for slot, req in admitted:
+                by_len.setdefault(len(req.prompt), []).append((slot, req))
+            for S in sorted(by_len):
+                rows, first = self._admit_group(by_len[S])
+                pending_first.append((rows, first))
+                total_new += len(rows)
+                done = [s for s, r in by_len[S] if r.max_new <= 1]
+                if done:
+                    self._retire_slots(done)
+            if any(r is not None for r in self.slot_req):
+                meta = [(i, r.rid, self.slot_emitted[i], r.max_new)
+                        for i, r in enumerate(self.slot_req) if r is not None]
+                if self._active_dirty:
+                    self._active_dev = jnp.asarray(
+                        np.array([r is not None for r in self.slot_req]))
+                    self._active_dirty = False
+                self.pool, self._tokens_dev, toks = self._block(
+                    self.params, self.pool, self._tokens_dev,
+                    self._active_dev)
+                blocks += 1
+                # drain the *previous* block on the host while this one runs
+                total_new += self._drain(pending, pending_first, streams,
+                                         done_wall)
+                pending, pending_first = (meta, toks), []
+                finished = []
+                for slot, _, emitted, max_new in meta:
+                    self.slot_emitted[slot] = emitted + self.block_steps
+                    if self.slot_emitted[slot] >= max_new:
+                        finished.append(slot)
+                if finished:
+                    self._retire_slots(finished)
+            elif sched.drained:
+                break
+            else:
+                nxt = sched.next_arrival
+                tick = max(tick + 1, nxt if nxt is not None else tick + 1)
+                continue
+            tick += 1
+        total_new += self._drain(pending, pending_first, streams, done_wall)
+        wall = time.perf_counter() - t0
+        lat = [done_wall[rid] - enq_wall[rid] for rid in done_wall]
+        # warm per-length prefill latency, weighted by the request mix
+        pf = [self._prefill_wall_s[len(r.prompt)] for r in requests
+              if len(r.prompt) in self._prefill_wall_s]
+        n_chips = jax.device_count()
+        metrics = {
+            "n_requests": len(requests),
+            "completed": len(done_wall),
+            "total_new_tokens": total_new,
+            "run_wall_s": wall,
+            "ticks": tick,
+            "decode_blocks": blocks,
+            "tok_s": total_new / max(wall, 1e-9),
+            "tok_s_per_chip": total_new / max(wall, 1e-9) / n_chips,
+            "prefill_latency_s": _percentiles(pf),
+            "request_latency_s": _percentiles(lat),
+        }
+        return streams, metrics
+
+    def _retire_slots(self, slots: List[int]) -> None:
+        """Host-only retirement: release pages and free the slots.  No device
+        work — a retired slot's decode writes are masked to the trash page
+        inside :func:`transformer.decode_step_paged`, so its old pages can be
+        reallocated immediately without a reset dispatch."""
+        for s in slots:
+            self._retire(s)
+        self._active_dirty = True
+
+    def _drain(self, pending, pending_first, streams, done_wall) -> int:
+        """Materialize prefill first-tokens and the previously launched
+        block's tokens into the per-request streams (capped at each request's
+        budget).  Returns decode tokens appended.
+
+        First-tokens flush before block tokens: a request admitted at tick t
+        first appears in the block launched at t, which drains at t+1 — one
+        drain after its prefill token."""
+        for rows, nxt in pending_first:
+            nxt_np = np.asarray(nxt)
+            for rid, max_new, row in rows:
+                streams[rid].append(int(nxt_np[row]))
+                if max_new <= 1:
+                    done_wall[rid] = time.perf_counter()
+        if pending is None:
+            return 0
+        meta, toks_dev = pending
+        toks = np.asarray(toks_dev)                        # (K, B)
+        added = 0
+        for slot, rid, emitted, max_new in meta:
+            take = min(self.block_steps, max_new - emitted)
+            if take > 0:
+                streams[rid].extend(int(t) for t in toks[:take, slot])
+                added += take
+            if emitted + self.block_steps >= max_new and rid not in done_wall:
+                done_wall[rid] = time.perf_counter()
+        return added
+
+    def _warmup(self, requests: Sequence[Request]) -> None:
+        """Compile every prefill length plus the decode block before timing,
+        and record the *warm* per-length prefill wall time (the engine's
+        prefill-latency metric — admissions in the serve loop never block on
+        the prefill result, so latency is measured here, device-idle).
+
+        Runs against a scratch pool/token state so warmup leaves no trace in
+        the served stream — the real run starts from a clean pool.
+        """
+        self._prefill_wall_s: Dict[int, float] = {}
+        widths = sorted({1, self.max_slots})
+        row_np = np.full((self.max_slots,), -1, np.int32)
+        row_np[0] = 0
+        for S in sorted({len(r.prompt) for r in requests}):
+            for width in widths:
+                tokens = jnp.zeros((width, S), jnp.int32)
+                nxt, ys = self._prefill(self.params, tokens)  # compile
+                jax.block_until_ready(nxt)
+                ta = time.perf_counter()
+                nxt, ys = self._prefill(self.params, tokens)  # warm, timed
+                jax.block_until_ready(nxt)
+                if width == 1:           # a lone arrival's prefill latency
+                    self._prefill_wall_s[S] = time.perf_counter() - ta
+                table_np = np.zeros((width, self.pages_per_slot), np.int32)
+                table_np[0] = np.arange(1, 1 + self.pages_per_slot)
+                len_np = np.zeros((width,), np.int32)
+                len_np[0] = S
+                self.pool, self._tokens_dev = self._write(
+                    self.pool, self._tokens_dev, jnp.asarray(row_np),
+                    jnp.asarray(table_np), ys, jnp.asarray(len_np), nxt)
+        self.pool, self._tokens_dev, toks = self._block(
+            self.params, self.pool, self._tokens_dev,
+            jnp.ones((self.max_slots,), bool))
+        jax.block_until_ready(toks)
+        # the warmup wrote into the (donated) pool: restore a clean state
+        self.pool = model.init_paged_pool(self.cfg, self.max_slots,
+                                          self.max_len, self.page_size,
+                                          self.alloc.n_pages)
+        self._tokens_dev = jnp.zeros((self.max_slots, 1), jnp.int32)
+        self._active_dev = jnp.zeros((self.max_slots,), bool)
+        self._active_dirty = False
+
+
+# ---------------------------------------------------------------------------
+# Fixed-batch baseline (the pre-paged serving loop, block-fused for fairness)
+# ---------------------------------------------------------------------------
+
+def make_fixed_batch_fns(cfg: ModelConfig, max_len: int, block_steps: int = 4,
+                         attn_args: Optional[Dict[str, Any]] = None):
+    """Jitted (prefill, K-step decode block) pair for the fixed-batch loop.
+
+    Build once and pass to :func:`fixed_batch_generate` when timing warm
+    calls — each call would otherwise re-trace.
+    """
+    attn_args = dict(attn_args or {})
+
+    @jax.jit
+    def _prefill(params, tokens):
+        logits, cache = transformer.prefill(params, cfg, tokens, max_len,
+                                            attn_args=attn_args)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def _block(params, cache, tokens):
+        def step(carry, _):
+            cache, tok = carry
+            logits, cache = transformer.decode_step(params, cfg, cache, tok)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return (cache, nxt[:, None]), nxt
+
+        (cache, _), toks = jax.lax.scan(step, (cache, tokens), None,
+                                        length=block_steps)
+        return cache, toks
+
+    return _prefill, _block
+
+
+def fixed_batch_generate(params, cfg: ModelConfig, prompts, max_new: int, *,
+                         max_len: int, block_steps: int = 4,
+                         attn_args: Optional[Dict[str, Any]] = None,
+                         fns=None):
+    """Greedy-decode a fixed batch to a generation-length barrier.
+
+    ``prompts``: (B, S) equal-length prompt batch.  Decode runs in the same
+    K-step scan-fused blocks as the continuous engine, so a throughput
+    comparison isolates the *batching policy* (barrier vs mid-flight refill)
+    rather than host dispatch overhead.  Returns ``(tokens (B, max_new),
+    prefill_seconds, decode_seconds)``; pass a warm ``fns`` pair from
+    :func:`make_fixed_batch_fns` to keep compile time out of the numbers.
+    """
+    _prefill, _block = fns or make_fixed_batch_fns(cfg, max_len, block_steps,
+                                                   attn_args)
+    t0 = time.perf_counter()
+    first, cache = _prefill(params, prompts)
+    first.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    out = [first[:, None]]
+    tok = first[:, None]
+    n_blocks = -(-(max_new - 1) // block_steps)
+    t0 = time.perf_counter()
+    for _ in range(n_blocks):
+        cache, toks = _block(params, cache, tok)
+        tok = toks[-1][:, None]
+        out.append(toks.T)                                # (B, K)
+    tokens = jnp.concatenate(out, axis=1)[:, :max_new]
+    tokens.block_until_ready()
+    t_decode = time.perf_counter() - t0
+    return np.asarray(tokens), t_prefill, t_decode

@@ -1,0 +1,112 @@
+"""Host-side page accounting for the paged KV pool.
+
+The device state (``models.transformer.init_paged_pool``) is a flat pool of
+fixed-size pages plus per-slot page tables; this module owns the *host* view:
+which physical pages are free, which belong to which request, and the
+pack/unpack adapters that prove the paged layout is bit-compatible with the
+contiguous ``init_cache`` layout (slot ``s`` of a sequence lives at page
+``table[s // page_size]``, offset ``s % page_size``).
+
+Page 0 is permanently reserved as the trash page: inactive slots' decode
+writes are masked onto it inside ``models.transformer.decode_step_paged``
+(and ``reset_slots`` can additionally point freed table rows at it), so a
+released slot's idle decode writes can never corrupt pages that have been
+handed to a new request.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax.numpy as jnp
+
+
+class PagePool:
+    """LIFO free-list allocator over ``n_pages`` physical pages.
+
+    LIFO keeps the working set of hot pages small (a just-released page is
+    the next one handed out), and — because allocation order is a pure
+    function of the request schedule — makes page placement deterministic
+    under a fixed arrival seed, which the scheduler determinism tests rely
+    on.
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError(f"need >= 2 pages (page 0 is the trash page), got {n_pages}")
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._used: set = set()
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def can_allocate(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def allocate(self, n: int) -> List[int]:
+        if not self.can_allocate(n):
+            raise RuntimeError(
+                f"page pool exhausted: want {n}, have {len(self._free)}")
+        got = [self._free.pop() for _ in range(n)]
+        self._used.update(got)
+        return got
+
+    def release(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(f"double free / foreign page {p}")
+            self._used.discard(p)
+            self._free.append(p)
+
+
+def pack_cache(pool, cache, table, slots=None):
+    """Scatter a contiguous decode cache into the paged pool.
+
+    ``cache`` is the ``init_cache``/``prefill`` layout (k/v ``(L, B, C, KV,
+    hd)``, scalar ``pos``); ``table`` is ``(B, P)`` physical page ids with
+    ``P * page_size == C``.  Batch row ``b`` lands in pool slot ``slots[b]``
+    (default ``0..B-1``).  Slot ``s`` goes to ``(table[b, s // ps], s % ps)``
+    — the inverse of :func:`unpack_cache`, and the layout under which the
+    paged gather reproduces the contiguous cache bit-for-bit.
+    """
+    L, B, C = cache["k"].shape[:3]
+    ps = pool["k_pages"].shape[2]
+    if table.shape != (B, C // ps) or C % ps:
+        raise ValueError(f"table {table.shape} incompatible with C={C}, page_size={ps}")
+    slots = jnp.arange(B) if slots is None else jnp.asarray(slots)
+    slotpos = jnp.arange(C)
+    phys = table[:, slotpos // ps]                     # (B, C)
+    off = slotpos % ps                                 # (C,)
+    pool = dict(pool)
+    pool["k_pages"] = pool["k_pages"].at[:, phys, off].set(cache["k"])
+    pool["v_pages"] = pool["v_pages"].at[:, phys, off].set(cache["v"])
+    pool["page_table"] = pool["page_table"].at[slots].set(table)
+    pool["lengths"] = pool["lengths"].at[slots].set(cache["pos"])
+    if "ssm_h" in pool:
+        pool["ssm_h"] = pool["ssm_h"].at[:, slots].set(cache["ssm_h"])
+        pool["ssm_conv"] = pool["ssm_conv"].at[:, slots].set(cache["ssm_conv"])
+    return pool
+
+
+def unpack_cache(pool, slots):
+    """Gather pool slots back to the contiguous ``init_cache`` layout.
+
+    Only meaningful when the gathered slots share one position (the
+    contiguous cache carries a scalar ``pos``); asserts that on the host
+    caller's behalf is left to tests — here the first slot's length is used.
+    """
+    slots = jnp.asarray(slots)
+    table = pool["page_table"][slots]                  # (B, P)
+    k = pool["k_pages"][:, table]                      # (L, B, P, ps, KV, hd)
+    v = pool["v_pages"][:, table]
+    L, B, P, ps = k.shape[:4]
+    cache = {
+        "k": k.reshape(L, B, P * ps, *k.shape[4:]),
+        "v": v.reshape(L, B, P * ps, *v.shape[4:]),
+        "pos": pool["lengths"][slots][0],
+    }
+    if "ssm_h" in pool:
+        cache["ssm_h"] = pool["ssm_h"][:, slots]
+        cache["ssm_conv"] = pool["ssm_conv"][:, slots]
+    return cache

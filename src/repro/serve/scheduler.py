@@ -1,0 +1,90 @@
+"""Request admission for continuous batching, plus the seeded synthetic
+open-loop workload the benchmarks and determinism tests run against.
+
+Time is measured in *ticks* — one tick per K-step decode block — so the
+whole schedule (arrivals, admissions, completions) is a pure function of the
+workload seed and the engine geometry, never of wall-clock jitter.  That is
+what makes "same seed ⇒ same per-request token streams" a testable property
+even while sequences join and leave mid-flight.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Request:
+    rid: int
+    prompt: Tuple[int, ...]          # token ids
+    max_new: int                     # decode budget
+    arrival_tick: int                # open-loop arrival time, in decode blocks
+
+
+def synthetic_workload(seed: int, n_requests: int, rate: float,
+                       prompt_lens: Sequence[int], vocab: int,
+                       max_new_range: Tuple[int, int] = (8, 32)) -> List[Request]:
+    """Open-loop Poisson-ish arrivals: exponential inter-arrival times with
+    mean ``1 / rate`` ticks, floored to integer ticks.
+
+    Prompt lengths are drawn from the small ``prompt_lens`` set (each length
+    is a separate prefill jit entry — SSM archs cannot pad prompts, so the
+    engine prefills at exact length).
+    """
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(rate, 1e-9), size=n_requests)
+    ticks = np.floor(np.cumsum(gaps)).astype(int)
+    lens = rng.choice(np.asarray(prompt_lens), size=n_requests)
+    lo, hi = max_new_range
+    news = rng.integers(lo, hi + 1, size=n_requests)
+    return [
+        Request(rid=i,
+                prompt=tuple(int(t) for t in rng.integers(0, vocab, size=lens[i])),
+                max_new=int(news[i]),
+                arrival_tick=int(ticks[i]))
+        for i in range(n_requests)
+    ]
+
+
+@dataclass
+class Scheduler:
+    """FIFO admission queue over the open-loop arrival stream.
+
+    The engine polls :meth:`admissible` once per tick (block boundary) and
+    admits while it has a free decode slot *and* the page allocator can cover
+    a full sequence; arrival order is the only priority — no reordering, so
+    the admitted set at every tick is deterministic.
+    """
+    requests: Sequence[Request]
+    queue: Deque[Request] = field(default_factory=deque)
+    _cursor: int = 0
+
+    def __post_init__(self):
+        self.requests = sorted(self.requests,
+                               key=lambda r: (r.arrival_tick, r.rid))
+
+    def poll(self, tick: int) -> None:
+        """Move requests whose arrival tick has passed into the queue."""
+        while (self._cursor < len(self.requests)
+               and self.requests[self._cursor].arrival_tick <= tick):
+            self.queue.append(self.requests[self._cursor])
+            self._cursor += 1
+
+    def admissible(self) -> Optional[Request]:
+        return self.queue[0] if self.queue else None
+
+    def take(self) -> Request:
+        return self.queue.popleft()
+
+    @property
+    def drained(self) -> bool:
+        return self._cursor == len(self.requests) and not self.queue
+
+    @property
+    def next_arrival(self) -> Optional[int]:
+        if self._cursor < len(self.requests):
+            return self.requests[self._cursor].arrival_tick
+        return None

@@ -61,3 +61,239 @@ def test_rolling_window_cache_matches_windowed_attention():
         lg, cache = model.decode_step(params, cfg, cache, tok[:, i:i + 1])
         errs.append(float(np.abs(np.asarray(lg[:, 0]) - np.asarray(full[:, i])).max()))
     assert max(errs) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# SWA cache edge cases: prefill slot rotation around prompt_len == window
+# ---------------------------------------------------------------------------
+
+def _swa_cfg():
+    cfg = configs.reduced("mixtral-8x22b")
+    return dataclasses.replace(
+        cfg, dtype="float32", param_dtype="float32",
+        moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+
+
+@pytest.mark.parametrize("delta", [-1, 0, 1])
+def test_swa_prefill_at_window_boundary(delta):
+    """Prompt length window-1 / window / window+1 exercises all three prefill
+    branches (zero-pad, exact fit, roll) of the slot-rotation logic."""
+    cfg = _swa_cfg()
+    W = cfg.swa_window
+    S = W + delta
+    n_decode = 6
+    key = jax.random.PRNGKey(10 + delta)
+    params = model.init_params(key, cfg)
+    tok = jax.random.randint(key, (1, S + n_decode), 0, cfg.vocab)
+    full, _ = model.forward(params, cfg, {"tokens": tok})
+    logits, cache = model.prefill(params, cfg, {"tokens": tok[:, :S]},
+                                  max_len=S + n_decode)
+    assert cache["k"].shape[2] == W
+    np.testing.assert_allclose(np.asarray(logits[:, -1]),
+                               np.asarray(full[:, S - 1]), atol=1e-4, rtol=1e-4)
+    for i in range(S, S + n_decode):
+        lg, cache = model.decode_step(params, cfg, cache, tok[:, i:i + 1])
+        np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, i]),
+                                   atol=1e-4, rtol=1e-4, err_msg=f"step {i}")
+
+
+@pytest.mark.slow
+def test_swa_decode_across_wrap_point():
+    """Resumed decode must stay correct as ``pos % C`` wraps past slot 0:
+    decode from before the first wrap (pos < W) to past the second (pos > 2W)
+    and check every step against the full forward."""
+    cfg = _swa_cfg()
+    W = cfg.swa_window
+    S = W // 2                     # prefill well short of the window
+    total = 2 * W + 4              # decode through two full wraps
+    key = jax.random.PRNGKey(20)
+    params = model.init_params(key, cfg)
+    tok = jax.random.randint(key, (1, total), 0, cfg.vocab)
+    full, _ = model.forward(params, cfg, {"tokens": tok})
+    _, cache = model.prefill(params, cfg, {"tokens": tok[:, :S]}, max_len=total)
+    for i in range(S, total):
+        lg, cache = model.decode_step(params, cfg, cache, tok[:, i:i + 1])
+        np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, i]),
+                                   atol=1e-4, rtol=1e-4,
+                                   err_msg=f"step {i} (wrap at {W}, {2 * W})")
+
+
+# ---------------------------------------------------------------------------
+# Paged serving path (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+# causal / SWA / SSM-hybrid; the SSM variant is the heaviest and rides in the
+# slow (serve CI) lane
+PAGED_ARCHS = ["qwen3-0.6b", "mixtral-8x22b",
+               pytest.param("hymba-1.5b", marks=pytest.mark.slow)]
+
+
+def _paged_cfg(arch):
+    cfg = configs.reduced(arch)
+    cfg = dataclasses.replace(cfg, dtype="float32", param_dtype="float32")
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_paged_decode_bit_identical_to_contiguous(arch):
+    """pack_cache + decode_step_paged (jnp backend) == decode_step, bit-for-
+    bit: the gathered pool in page-table order IS the contiguous layout."""
+    from repro.serve.pages import PagePool, pack_cache, unpack_cache
+
+    cfg = _paged_cfg(arch)
+    key = jax.random.PRNGKey(1)
+    params = model.init_params(key, cfg)
+    B, S, max_len, ps = 2, 12, 24, 8
+    tok = jax.random.randint(key, (B, S + 6), 0, cfg.vocab)
+    _, cache = model.prefill(params, cfg, {"tokens": tok[:, :S]},
+                             max_len=max_len)
+    C = cache["k"].shape[2]
+    pool = model.init_paged_pool(cfg, max_slots=B, max_len=max_len,
+                                 page_size=ps)
+    alloc = PagePool(pool["k_pages"].shape[1])
+    table = jnp.asarray([alloc.allocate(C // ps) for _ in range(B)], jnp.int32)
+    pool = pack_cache(pool, cache, table)
+    rt = unpack_cache(pool, jnp.arange(B))
+    np.testing.assert_array_equal(np.asarray(rt["k"]), np.asarray(cache["k"]))
+    np.testing.assert_array_equal(np.asarray(rt["v"]), np.asarray(cache["v"]))
+    aa = {"backend": "jnp"}
+    for i in range(S, S + 6):
+        lg_c, cache = model.decode_step(params, cfg, cache, tok[:, i:i + 1])
+        lg_p, pool = model.decode_step_paged(params, cfg, pool,
+                                             tok[:, i:i + 1], attn_args=aa)
+        np.testing.assert_array_equal(np.asarray(lg_c), np.asarray(lg_p),
+                                      err_msg=f"{arch} step {i}")
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mixtral-8x22b"])
+def test_paged_decode_pallas_within_flash_tolerance(arch):
+    """The split-KV kernel route stays within flash tolerance of the jnp
+    gather route on the same pool state."""
+    from repro.serve.pages import PagePool, pack_cache
+
+    cfg = _paged_cfg(arch)
+    key = jax.random.PRNGKey(2)
+    params = model.init_params(key, cfg)
+    B, S, max_len, ps = 2, 12, 24, 8
+    tok = jax.random.randint(key, (B, S + 3), 0, cfg.vocab)
+    _, cache = model.prefill(params, cfg, {"tokens": tok[:, :S]},
+                             max_len=max_len)
+    C = cache["k"].shape[2]
+    pool = model.init_paged_pool(cfg, max_slots=B, max_len=max_len,
+                                 page_size=ps)
+    alloc = PagePool(pool["k_pages"].shape[1])
+    table = jnp.asarray([alloc.allocate(C // ps) for _ in range(B)], jnp.int32)
+    pool = pack_cache(pool, cache, table)
+    pool_j = dict(pool)
+    for i in range(S, S + 3):
+        lg_p, pool = model.decode_step_paged(params, cfg, pool,
+                                             tok[:, i:i + 1],
+                                             attn_args={"backend": "pallas"})
+        lg_j, pool_j = model.decode_step_paged(params, cfg, pool_j,
+                                               tok[:, i:i + 1],
+                                               attn_args={"backend": "jnp"})
+        np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_j),
+                                   atol=2e-4, rtol=2e-4,
+                                   err_msg=f"{arch} step {i}")
+
+
+def test_page_pool_allocator():
+    from repro.serve.pages import PagePool
+
+    pool = PagePool(8)                  # pages 1..7 allocatable, 0 is trash
+    assert pool.free_count == 7
+    a = pool.allocate(3)
+    b = pool.allocate(4)
+    assert not pool.can_allocate(1)
+    assert 0 not in a + b and len(set(a + b)) == 7
+    with pytest.raises(RuntimeError):
+        pool.allocate(1)
+    pool.release(a)
+    assert pool.free_count == 3
+    # LIFO: the just-released pages come back first (deterministic placement)
+    assert pool.allocate(3) == a[::-1]
+    with pytest.raises(ValueError):
+        pool.release([b[0], b[0]])      # double free detected
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching engine
+# ---------------------------------------------------------------------------
+
+def _run_engine(params, cfg, reqs, **kw):
+    from repro.serve import ServeEngine
+    geo = dict(max_slots=3, max_len=32, page_size=8, block_steps=2,
+               attn_args={"backend": "jnp"})
+    geo.update(kw)
+    eng = ServeEngine(params, cfg, **geo)
+    return eng.run(reqs)
+
+
+def test_engine_deterministic_with_midflight_joins():
+    """Same arrival seed ⇒ identical per-request streams, with requests
+    joining mid-flight (more requests than slots forces slot reuse)."""
+    from repro.serve import synthetic_workload
+
+    cfg = _paged_cfg("qwen3-0.6b")
+    params = model.init_params(jax.random.PRNGKey(1), cfg)
+    reqs = synthetic_workload(seed=7, n_requests=7, rate=0.8,
+                              prompt_lens=[4, 8], vocab=cfg.vocab,
+                              max_new_range=(3, 9))
+    assert len(reqs) > 3  # > max_slots ⇒ at least one slot is reused
+    s1, m1 = _run_engine(params, cfg, reqs)
+    s2, m2 = _run_engine(params, cfg, reqs)
+    assert s1 == s2
+    assert m1["completed"] == len(reqs)
+    for r in reqs:
+        assert len(s1[r.rid]) == r.max_new
+    # mid-flight joins actually happened: more admissions than slots implies
+    # the engine refilled slots while other sequences were still decoding.
+    spread = max(r.arrival_tick for r in reqs) - min(r.arrival_tick for r in reqs)
+    assert spread > 0 and m1["decode_blocks"] > 0
+
+
+@pytest.mark.parametrize("arch", [
+    "qwen3-0.6b", pytest.param("hymba-1.5b", marks=pytest.mark.slow)])
+def test_engine_streams_match_isolated_decode(arch):
+    """Every request's stream == its solo fixed-batch greedy decode — slots
+    sharing a pool and joining mid-flight must not perturb each other.
+    (MoE archs are excluded: expert capacity couples batch rows by design.)"""
+    from repro.serve import fixed_batch_generate, synthetic_workload
+
+    cfg = _paged_cfg(arch)
+    params = model.init_params(jax.random.PRNGKey(1), cfg)
+    reqs = synthetic_workload(seed=5, n_requests=5, rate=1.0,
+                              prompt_lens=[4, 8], vocab=cfg.vocab,
+                              max_new_range=(3, 7))
+    streams, _ = _run_engine(params, cfg, reqs)
+    for r in reqs:
+        tok = jnp.asarray(np.asarray(r.prompt, np.int32)[None])
+        toks, _, _ = fixed_batch_generate(params, cfg, tok, r.max_new,
+                                          max_len=32,
+                                          attn_args={"backend": "jnp"})
+        assert list(toks[0]) == streams[r.rid], r.rid
+
+
+@pytest.mark.slow
+def test_engine_swa_arch_with_window_straddling_prompts():
+    """SWA engine: prompts shorter and longer than the window, deterministic,
+    and (capacity_factor high enough that nothing drops) equal to isolated."""
+    from repro.serve import fixed_batch_generate, synthetic_workload
+
+    cfg = _paged_cfg("mixtral-8x22b")
+    params = model.init_params(jax.random.PRNGKey(2), cfg)
+    reqs = synthetic_workload(seed=11, n_requests=5, rate=1.0,
+                              prompt_lens=[12, 20], vocab=cfg.vocab,
+                              max_new_range=(4, 8))
+    s1, _ = _run_engine(params, cfg, reqs, max_slots=2, max_len=40)
+    s2, _ = _run_engine(params, cfg, reqs, max_slots=2, max_len=40)
+    assert s1 == s2
+    for r in reqs:
+        tok = jnp.asarray(np.asarray(r.prompt, np.int32)[None])
+        toks, _, _ = fixed_batch_generate(params, cfg, tok, r.max_new,
+                                          max_len=40,
+                                          attn_args={"backend": "jnp"})
+        assert list(toks[0]) == s1[r.rid], r.rid

@@ -16,6 +16,13 @@ Both are jit-warmed before timing.  Emits ``BENCH_serve.json`` (repo root and
 (arch, rate) point, and asserts continuous ≥ fixed-batch throughput on every
 point.
 
+It also records an **overload point** (DESIGN.md §5c): the same engine driven
+far past capacity, once with deadline-aware shedding (every request carries a
+``deadline_tick``) and once with deadlines stripped (pure FIFO, nothing ever
+shed).  With shedding the queue stays bounded and survivor p99 latency is flat;
+without it every request completes but the tail latency grows with the backlog
+— the benchmark asserts shed-p99 < no-shed-p99 and stores both.
+
 Run:  PYTHONPATH=src:. python benchmarks/bench_serve.py
 """
 from __future__ import annotations
@@ -102,6 +109,59 @@ def run_fixed_batch(params, cfg, reqs):
     return tokens, wall
 
 
+#: Overload point: arrivals far above what MAX_SLOTS can carry.
+OVERLOAD_RATE = 16.0
+OVERLOAD_N = 48
+OVERLOAD_SLACK = (2, 12)   # deadline_tick = arrival + U[2, 12]
+
+
+def run_overload(params, cfg) -> dict:
+    """Drive the engine past capacity with and without deadline shedding.
+
+    Same workload, same geometry; the no-shed leg strips ``deadline_tick``
+    from every request (nothing is ever shed, the queue backlog grows and
+    tail latency with it).  Returns both legs' terminal counts and latency
+    percentiles."""
+    import dataclasses
+
+    from repro.serve import ServeEngine, synthetic_workload
+
+    reqs = synthetic_workload(seed=SEED, n_requests=OVERLOAD_N,
+                              rate=OVERLOAD_RATE, prompt_lens=PROMPT_LENS,
+                              vocab=cfg.vocab, max_new_range=MAX_NEW,
+                              deadline_slack=OVERLOAD_SLACK)
+    stripped = [dataclasses.replace(r, deadline_tick=None) for r in reqs]
+    legs = {}
+    for name, workload in (("with_shedding", reqs),
+                           ("without_shedding", stripped)):
+        eng = ServeEngine(params, cfg, max_slots=MAX_SLOTS,
+                          max_len=_max_len(cfg), page_size=PAGE_SIZE,
+                          block_steps=BLOCK_STEPS)
+        _, m = eng.run(workload)
+        legs[name] = {
+            "completed": m["completed"], "shed": m["shed"],
+            "rejected": m["rejected"], "failed": m["failed"],
+            "deadline_hit_rate": m["deadline_hit_rate"],
+            "request_latency_s": m["request_latency_s"],
+            "queue_depth": m["queue_depth"],
+            "run_wall_s": round(m["run_wall_s"], 4),
+            "tok_s": round(m["tok_s"], 2),
+        }
+        print(f"overload {name}: completed {m['completed']}/{OVERLOAD_N}, "
+              f"shed {m['shed']}, p99 latency "
+              f"{m['request_latency_s']['p99'] * 1e3:.0f}ms, queue p99 "
+              f"{m['queue_depth']['p99']:.0f}", flush=True)
+    shed_p99 = legs["with_shedding"]["request_latency_s"]["p99"]
+    noshed_p99 = legs["without_shedding"]["request_latency_s"]["p99"]
+    assert legs["with_shedding"]["shed"] > 0, "overload point never shed"
+    assert shed_p99 < noshed_p99, (
+        f"shedding did not bound tail latency: p99 {shed_p99:.3f}s with "
+        f"shedding vs {noshed_p99:.3f}s without")
+    return {"rate_req_per_block": OVERLOAD_RATE, "n_requests": OVERLOAD_N,
+            "deadline_slack": list(OVERLOAD_SLACK),
+            "p99_ratio": round(noshed_p99 / max(shed_p99, 1e-9), 3), **legs}
+
+
 def run() -> dict:
     import jax
     import repro.configs as configs
@@ -153,12 +213,16 @@ def run() -> dict:
         "continuous batching lost to the fixed-batch barrier on: "
         + ", ".join(f"{p['arch']}@{p['rate_req_per_block']}"
                     f" ({p['speedup']}x)" for p in losing))
+    cfg = configs.reduced(ARCHS[0])
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    overload = {"arch": ARCHS[0], **run_overload(params, cfg)}
     return {
         "geometry": {"max_slots": MAX_SLOTS, "block_steps": BLOCK_STEPS,
                      "page_size": PAGE_SIZE, "prompt_lens": PROMPT_LENS,
                      "max_new_range": list(MAX_NEW), "seed": SEED,
                      "n_chips": n_chips},
         "points": points,
+        "overload": overload,
     }
 
 

@@ -75,7 +75,13 @@ class CheckpointManager:
         self._gc_tmp()
 
     # ------------------------------------------------------------------ save
-    def save(self, step: int, state, *, blocking: bool = False):
+    def save(self, step: int, state, *, blocking: bool = False,
+             meta: Optional[Dict[str, Any]] = None):
+        """``meta``: optional JSON-serializable sidecar stored inside the
+        fsynced manifest (read back with :meth:`read_meta`).  The serve
+        engine's snapshot uses it for host bookkeeping (scheduler cursor,
+        slot tables, streams) that rides with the device arrays — a torn
+        manifest fails :meth:`verify` exactly like a torn leaf."""
         self.wait()
         host_leaves = {k: np.asarray(jax.device_get(v))
                        for k, v in _flatten(state).items()}
@@ -99,8 +105,11 @@ class CheckpointManager:
                 manifest[key] = {"file": fname, "shape": list(arr.shape),
                                  "dtype": str(arr.dtype),
                                  "crc32": zlib.crc32(arr.tobytes())}
+            doc = {"step": step, "leaves": manifest}
+            if meta is not None:
+                doc["meta"] = meta
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump({"step": step, "leaves": manifest}, f)
+                json.dump(doc, f)
                 f.flush()
                 os.fsync(f.fileno())
             # Publish via rename.  If a racing writer publishes the same step
@@ -194,6 +203,12 @@ class CheckpointManager:
                 return step
             self.quarantine(step)
         return None
+
+    def read_meta(self, step: int) -> Optional[Dict[str, Any]]:
+        """The ``meta`` sidecar saved with ``step`` (None if absent)."""
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f).get("meta")
 
     def restore(self, step: int, template, *, shardings=None):
         """Restore into ``template``'s structure; ``shardings`` (same structure,

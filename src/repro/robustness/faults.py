@@ -50,6 +50,29 @@ kind           effect at / around ``step``
                (no grace, no drain — a reclaimed spot VM); with no ``arg``
                the victim rank is chosen pure in ``(seed, step)``.
 =============  ==============================================================
+
+Serve-cell kinds (``step`` is an engine *tick* — one K-step decode block —
+actuated by ``serve/engine.py`` via ``harness.ServeFaultActuator``; inert in
+a trainer's plan):
+
+=============  ==============================================================
+``nan_logits``  splice NaN into ONE decode slot's logits for every step of
+               the block launched at tick ``step`` (victim slot = ``arg`` if
+               given, else pure in ``(seed, tick)``).  In-jit via a per-slot
+               gain vector multiplied into the logits (1.0 elsewhere — a
+               bit-exact identity), so the per-slot finite sentinel riding
+               the block's ``(K, B)`` outputs must catch it one drain later
+               and quarantine exactly that slot (``FAILED``).
+``engine_kill``  SIGKILL the serve process right after the block at tick
+               ``step`` is dispatched (``arg`` = ``term`` sends SIGTERM
+               instead — exercises the graceful drain + snapshot path).
+``slow_block``  the block at tick ``step`` drains ``arg`` seconds late
+               (default 1.0) — host-side sleep at the drain hook.
+``pool_leak``   silently drop one page from the allocator's free list at
+               tick ``step`` (LIFO head — deterministic victim): the
+               engine's boundary ``PagePool.verify()`` must fail loudly
+               instead of serving from a corrupt pool.
+=============  ==============================================================
 """
 from __future__ import annotations
 
@@ -74,10 +97,14 @@ _STOP_EXIT_CODES = {
 
 FAULT_KINDS = ("kill", "sigterm", "nan_grad", "inf_grad", "ckpt_corrupt",
                "io_error", "straggler", "comm_corrupt", "preempt",
-               "worker_lost")
+               "worker_lost", "nan_logits", "engine_kill", "slow_block",
+               "pool_leak")
 #: Fleet-level kinds: actuated by the elastic coordinator against worker
 #: processes; inert inside a single worker's own FaultPlan.
 FLEET_KINDS = ("preempt", "worker_lost")
+#: Serve-cell kinds: tick-keyed, actuated by the serve engine
+#: (``harness.ServeFaultActuator``); inert in a trainer's FaultPlan.
+SERVE_KINDS = ("nan_logits", "engine_kill", "slow_block", "pool_leak")
 CORRUPT_MODES = ("bitflip", "truncate", "delete_leaf")
 
 
@@ -219,6 +246,44 @@ class FaultPlan:
     def preempt_grace(self, spec: FaultSpec) -> float:
         """Grace seconds between a preempt notice's SIGTERM and its SIGKILL."""
         return float(spec.arg) if spec.arg else 5.0
+
+    # --------------------------------------------------- serve-cell (engine)
+    @property
+    def has_serve_faults(self) -> bool:
+        return bool(self._of(*SERVE_KINDS))
+
+    @property
+    def has_logit_faults(self) -> bool:
+        return bool(self._of("nan_logits"))
+
+    def logits_victim(self, tick: int, n_slots: int) -> Optional[int]:
+        """Victim decode slot for a ``nan_logits`` fault at ``tick`` (None on
+        healthy ticks) — explicit ``:slot`` arg, else pure in ``(seed,
+        tick)``."""
+        for f in self._of("nan_logits"):
+            if f.step == tick:
+                if f.arg:
+                    return int(f.arg) % max(n_slots, 1)
+                rng = np.random.default_rng((self.seed, tick))
+                return int(rng.integers(max(n_slots, 1)))
+        return None
+
+    def serve_signal_at(self, tick: int) -> Optional[str]:
+        """'kill' / 'term' if an ``engine_kill`` fires at ``tick`` (``arg`` =
+        ``term`` downgrades the SIGKILL to a drain-exercising SIGTERM)."""
+        for f in self._of("engine_kill"):
+            if f.step == tick:
+                return "term" if f.arg == "term" else "kill"
+        return None
+
+    def slow_block_delay(self, tick: int) -> float:
+        for f in self._of("slow_block"):
+            if f.step == tick:
+                return float(f.arg) if f.arg else 1.0
+        return 0.0
+
+    def pool_leak_at(self, tick: int) -> bool:
+        return any(f.step == tick for f in self._of("pool_leak"))
 
     # ------------------------------------------------- checkpoint corruption
     def corrupt_mode(self, step: int) -> Optional[str]:

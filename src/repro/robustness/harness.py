@@ -19,6 +19,12 @@ Two pieces live here:
   splice) and data-path faults (``io_error``) are NOT actuated here — they are
   carried by the batch stream (``tag_grad_faults`` / ``FaultyBatchSource``)
   so that they replay exactly under resume.
+
+* :class:`ServeFaultActuator` — the serve-cell counterpart (DESIGN.md §5c),
+  keyed by engine *tick* instead of train step: signal delivery after block
+  dispatch (``engine_kill``), drain-side latency (``slow_block``), allocator
+  corruption (``pool_leak``), and the per-slot logits gain row that carries
+  the in-jit ``nan_logits`` splice into the decode block.
 """
 from __future__ import annotations
 
@@ -27,6 +33,8 @@ import os
 import signal
 import time
 from typing import Optional, Set, Tuple
+
+import numpy as np
 
 from repro.robustness.faults import FaultPlan, corrupt_checkpoint
 
@@ -137,3 +145,71 @@ class FaultActuator:
         victim = corrupt_checkpoint(directory, step, mode, self.plan.seed)
         log.warning("fault injection: %s on checkpoint step_%d (%s)",
                     mode, step, victim)
+
+
+class ServeFaultActuator:
+    """Fires a plan's serve-cell faults at the engine's tick hooks.
+
+    The ``nan_logits`` splice is *in-jit* like the trainer's ``nan_grad``: the
+    engine multiplies a per-slot ``(B,)`` gain row into the decode block's
+    logits, 1.0 on every healthy (slot, tick) — a bit-exact identity — and
+    NaN on the victim, so injection replays exactly under snapshot-resume.
+    Host-visible faults (signal, drain delay, allocator corruption) fire at
+    most once per (kind, tick) per process."""
+
+    def __init__(self, plan: Optional[FaultPlan]):
+        self.plan = plan
+        self._fired: Set[Tuple[str, int]] = set()
+
+    @property
+    def has_logit_faults(self) -> bool:
+        return self.plan is not None and self.plan.has_logit_faults
+
+    def logits_gain(self, tick: int, n_slots: int) -> np.ndarray:
+        """(B,) float32 gain row for the block launched at ``tick``."""
+        gain = np.ones((n_slots,), np.float32)
+        if self.plan is not None:
+            victim = self.plan.logits_victim(tick, n_slots)
+            if victim is not None:
+                log.warning("fault injection: nan_logits on slot %d at tick "
+                            "%d", victim, tick)
+                gain[victim] = np.nan
+        return gain
+
+    def after_dispatch(self, tick: int) -> None:
+        """Kill/SIGTERM once the block at the fault tick is in flight — the
+        worst moment: device work queued, nothing drained, snapshot stale."""
+        if self.plan is None:
+            return
+        kind = self.plan.serve_signal_at(tick)
+        if kind is None or (kind, tick) in self._fired:
+            return
+        self._fired.add((kind, tick))
+        sig = signal.SIGKILL if kind == "kill" else signal.SIGTERM
+        log.warning("fault injection: sending %s to self (tick %d)",
+                    sig.name, tick)
+        os.kill(os.getpid(), sig)
+
+    def before_drain(self, tick: int) -> None:
+        """Slow block: the tick's results arrive late."""
+        if self.plan is None:
+            return
+        delay = self.plan.slow_block_delay(tick)
+        if delay > 0 and ("slow_block", tick) not in self._fired:
+            self._fired.add(("slow_block", tick))
+            log.warning("fault injection: slow block at tick %d (%.3fs)",
+                        tick, delay)
+            time.sleep(delay)
+
+    def maybe_leak(self, tick: int, alloc) -> None:
+        """Pool leak: silently drop the allocator's LIFO head page.  The
+        engine's next boundary ``PagePool.verify()`` must turn this into a
+        loud failure instead of serving from a corrupt pool."""
+        if self.plan is None or not self.plan.pool_leak_at(tick):
+            return
+        if ("pool_leak", tick) in self._fired or not alloc._free:
+            return
+        self._fired.add(("pool_leak", tick))
+        page = alloc._free.pop()
+        log.warning("fault injection: leaked page %d from the free list at "
+                    "tick %d", page, tick)

@@ -6,5 +6,6 @@
 """
 from repro.serve.engine import ServeEngine, fixed_batch_generate  # noqa: F401
 from repro.serve.pages import PagePool, pack_cache, unpack_cache  # noqa: F401
-from repro.serve.scheduler import (Request, Scheduler,            # noqa: F401
-                                   synthetic_workload)
+from repro.serve.scheduler import (COMPLETED, FAILED,             # noqa: F401
+                                   REJECTED, SHED, TERMINAL_STATUSES,
+                                   Request, Scheduler, synthetic_workload)

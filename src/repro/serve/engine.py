@@ -3,9 +3,11 @@
 The engine owns ``max_slots`` decode slots backed by one paged KV pool.  Each
 iteration of :meth:`ServeEngine.run` is one *tick*:
 
-    poll arrivals -> admit into free slots (prefill) -> launch a K-step
-    decode block -> drain the previous block's tokens while it runs ->
-    retire completed slots (host token counts; no device read needed)
+    poll arrivals -> shed unmeetable deadlines -> admit into free slots
+    (validate, prefill) -> launch a K-step decode block -> drain the previous
+    block's tokens while it runs -> quarantine non-finite slots -> retire
+    completed slots (host token counts; no device read needed) -> verify the
+    page allocator's invariants
 
 Prefill and decode are disaggregated: each tick's admissible requests are
 grouped by prompt length (SSM archs cannot pad prompts — padding corrupts the
@@ -24,10 +26,36 @@ tokens are fetched while the current block runs — completions are detected
 from host-side token *counts*, which advance deterministically by K per
 block, so scheduling never waits on device data.
 
+Robustness (DESIGN.md §5c) applies the GradES granularity principle to
+serving failure domains — one poisoned or expired *request* is quarantined or
+shed, never the whole engine:
+
+* **Per-slot finite sentinel**: the decode block's ``(K, B)`` token outputs
+  carry a ``(K, B)`` all-finite flag computed in-scan from the same logits
+  (the PR 6 no-extra-sync idiom — it rides the drain transfer that happens
+  anyway, one block behind).  A non-finite slot is retired as ``FAILED``, its
+  stream truncated at the last finite token and its pages released; the other
+  slots' streams are bit-identical to an undisturbed run (slots only couple
+  through MoE expert capacity, which the parity tests already exclude).
+* **Deadline-aware admission + shedding** via :class:`~repro.serve.scheduler.
+  Scheduler`: a bounded queue that deterministically sheds requests whose
+  ``deadline_tick`` has passed or provably cannot be met, so overload turns
+  into an explicit shed rate instead of unbounded queue wait.
+* **Snapshot-resume**: at block boundaries the full engine state — device
+  pool + page tables/lengths, host slot tables, per-request streams,
+  scheduler cursor, allocator free list — goes through
+  ``checkpoint/manager.py``'s CRC-manifest path.  SIGTERM
+  (:class:`~repro.robustness.harness.GracefulShutdown`) stops admission,
+  snapshots, and returns ``stop="preempted"`` (exit 75 from the CLI); a
+  restart resumes mid-workload with per-request token streams bit-identical
+  to the uninterrupted run.
+
 Determinism: admissions are FIFO by arrival tick, slot choice is
-lowest-index-free, page placement is the LIFO allocator, and decoding is
-greedy argmax — the full token stream of every request is a pure function of
-the workload seed and the engine geometry.
+lowest-index-free, page placement is the LIFO allocator, shedding is a pure
+function of ``(tick, queue, block_steps, max_slots)``, faults are tick-keyed,
+and decoding is greedy argmax — the full token stream *and terminal status*
+of every request is a pure function of the workload seed and the engine
+geometry.
 """
 from __future__ import annotations
 
@@ -39,29 +67,39 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.manager import CheckpointManager
 from repro.config import ModelConfig
 from repro.models import model, transformer
+from repro.robustness.faults import FaultPlan
+from repro.robustness.harness import GracefulShutdown, ServeFaultActuator
 from repro.serve.pages import PagePool
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import (COMPLETED, FAILED, REJECTED, SHED,
+                                   Request, Scheduler)
 
 
 def _percentiles(xs: Sequence[float]) -> Dict[str, float]:
     if not xs:
-        return {"mean": 0.0, "p50": 0.0, "p99": 0.0}
+        return {"mean": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0, "n": 0}
     a = np.asarray(xs, np.float64)
     return {"mean": float(a.mean()), "p50": float(np.percentile(a, 50)),
-            "p99": float(np.percentile(a, 99))}
+            "p95": float(np.percentile(a, 95)),
+            "p99": float(np.percentile(a, 99)), "n": int(a.size)}
 
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, *, max_slots: int,
                  max_len: int, page_size: int = 8, block_steps: int = 4,
-                 n_pages: int = 0, attn_args: Optional[Dict[str, Any]] = None):
+                 n_pages: int = 0, attn_args: Optional[Dict[str, Any]] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 max_queue: Optional[int] = None, snapshot_every: int = 0):
         assert model.supports_paged(cfg), cfg.family
         self.params, self.cfg = params, cfg
         self.max_slots, self.max_len = max_slots, max_len
         self.page_size, self.block_steps = page_size, block_steps
         self.attn_args = dict(attn_args or {})
+        self.max_queue = max_queue
+        self.snapshot_every = snapshot_every
+        self.faults = ServeFaultActuator(fault_plan)
         self.pool = model.init_paged_pool(cfg, max_slots, max_len, page_size,
                                           n_pages)
         self.pages_per_slot = self.pool["page_table"].shape[1]
@@ -78,6 +116,9 @@ class ServeEngine:
         # cached (B,) active mask; rebuilt only when slot membership changes
         self._active_dev = jnp.zeros((max_slots,), bool)
         self._active_dirty = False
+        # quarantines discovered at a snapshot flush, whose slot release must
+        # wait for the tick the uninterrupted run would have performed it
+        self._deferred_failures: List[Tuple[int, int]] = []
 
         cfg_, args_ = self.cfg, self.attn_args
 
@@ -96,17 +137,24 @@ class ServeEngine:
             tokens_dev = jnp.where(sel, nxt[safe], tokens_dev[:, 0])[:, None]
             return pool, tokens_dev
 
-        def _block(params, pool, tokens, active):
+        def _block(params, pool, tokens, active, gain):
             def step(carry, _):
                 pool, tok = carry
                 logits, pool = transformer.decode_step_paged(
                     params, cfg_, pool, tok, active=active, attn_args=args_)
-                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-                return (pool, nxt[:, None]), nxt
+                # gain is 1.0 on every healthy slot — a bit-exact identity —
+                # and NaN on a nan_logits victim (in-jit injection, replays
+                # under snapshot-resume exactly like the trainer's nan_grad)
+                last = logits[:, -1] * gain[:, None]
+                nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+                # per-slot all-finite sentinel: rides the (K, B) drain
+                # transfer that happens anyway — no extra device sync
+                finite = jnp.isfinite(last).all(axis=-1)
+                return (pool, nxt[:, None]), (nxt, finite)
 
-            (pool, tok), toks = jax.lax.scan(step, (pool, tokens), None,
-                                             length=self.block_steps)
-            return pool, tok, toks                         # toks: (K, B)
+            (pool, tok), (toks, finite) = jax.lax.scan(
+                step, (pool, tokens), None, length=self.block_steps)
+            return pool, tok, toks, finite             # toks/finite: (K, B)
 
         # one jit each; shape-polymorphic via the jit cache (prefill re-traces
         # per distinct prompt length × width bucket — keep the workload's
@@ -116,6 +164,29 @@ class ServeEngine:
         self._block = jax.jit(_block, donate_argnums=(1, 2))
 
     # -- admission / retirement -------------------------------------------
+
+    def _validate(self, req: Request) -> Optional[str]:
+        """Admission validation: the rejection reason, or None for a valid
+        request.  Rejected requests get terminal status ``REJECTED`` and
+        never touch engine state — today's alternative is a silent fixed-page
+        -budget overflow (causal) or an assert crash."""
+        if len(req.prompt) == 0:
+            return "empty_prompt"
+        if req.max_new < 1:
+            return "nonpositive_max_new"
+        total = len(req.prompt) + req.max_new
+        if self.cfg.swa_window:
+            # the SWA ring (slot = t % C) is depth-proof only when the ring
+            # holds the whole window; an engine sized below the window (C <
+            # window — page budget can't cover it) serves a request only
+            # while it fits inside the ring
+            C = self.pages_per_slot * self.page_size
+            if C < self.cfg.swa_window and total > C:
+                return "swa_ring_violation"
+            return None
+        if total > self.max_len:
+            return "budget_overflow"
+        return None
 
     def _admit_group(self, group: List[Tuple[int, Request]]):
         """Prefill one same-prompt-length group of ``(slot, request)`` pairs
@@ -131,10 +202,6 @@ class ServeEngine:
         len_np = np.zeros((width,), np.int32)
         row_np = np.full((self.max_slots,), -1, np.int32)
         for i, (slot, req) in enumerate(group):
-            if not self.cfg.swa_window:
-                assert len(req.prompt) + req.max_new <= self.max_len, (
-                    f"request {req.rid} needs {len(req.prompt) + req.max_new} "
-                    f"slots > max_len {self.max_len}")
             pages = self.alloc.allocate(self.pages_per_slot)
             toks_np[i] = req.prompt
             table_np[i] = pages
@@ -153,6 +220,8 @@ class ServeEngine:
                 for i, (_, req) in enumerate(group)], nxt
 
     def _retire(self, slot: int) -> None:
+        if self.slot_pages[slot] is None:
+            raise RuntimeError(f"slot {slot} retired twice (no pages held)")
         self.alloc.release(self.slot_pages[slot])
         self.slot_req[slot] = None
         self.slot_pages[slot] = None
@@ -160,92 +229,200 @@ class ServeEngine:
 
     # -- the serve loop ----------------------------------------------------
 
-    def run(self, requests: Sequence[Request], *, warmup: bool = True):
-        """Serve ``requests`` to completion; returns ``(streams, metrics)``.
+    def run(self, requests: Sequence[Request], *, warmup: bool = True,
+            snapshot_dir: Optional[str] = None,
+            drain_after_tick: Optional[int] = None,
+            install_signals: bool = True):
+        """Serve ``requests``; returns ``(streams, metrics)``.
 
         ``streams[rid]`` is the request's full greedy token stream (first
         token from prefill, the rest from decode blocks, truncated at its
-        ``max_new``).  Metrics cover prefill latency, end-to-end request
-        latency (queue wait included — that is what an open-loop sweep
-        measures), and decode throughput.
+        ``max_new`` — or at the last finite token for a ``FAILED`` request).
+        Metrics cover terminal-status counts, prefill latency, end-to-end
+        request latency (queue wait included — that is what an open-loop
+        sweep measures), queue depth, deadline hit rate, and throughput.
+
+        ``snapshot_dir`` enables snapshot-resume: if the directory holds a
+        valid snapshot the run *resumes* it (the caller must re-supply the
+        identical workload); with ``snapshot_every`` set, boundary snapshots
+        are written every that many ticks.  SIGTERM/SIGINT — or tick passing
+        ``drain_after_tick``, the signal-free test seam — stops admission,
+        flushes the in-flight block, snapshots, and returns
+        ``metrics["stop"] == "preempted"``.  Latency percentiles cover the
+        current incarnation only; streams, statuses and counters are global.
         """
         if warmup:
             self._warmup(requests)
-        sched = Scheduler(list(requests))
+        manager = (CheckpointManager(snapshot_dir, keep=2)
+                   if snapshot_dir is not None else None)
+        sched = Scheduler(list(requests), max_queue=self.max_queue,
+                          block_steps=self.block_steps,
+                          max_slots=self.max_slots)
+        self._sched = sched
         streams: Dict[int, List[int]] = {r.rid: [] for r in requests}
+        self._done_tick: Dict[int, int] = {}
+        self._admit_order: List[int] = []
+        self._deferred_failures = []
         enq_wall: Dict[int, float] = {}
         done_wall: Dict[int, float] = {}
-        # previous block not yet fetched: (meta rows, (K, B) device tokens)
-        pending: Optional[Tuple[list, jax.Array]] = None
+        # previous block not yet fetched:
+        # (launch tick, meta rows, (K, B) tokens, (K, B) finite flags)
+        pending: Optional[Tuple[int, list, jax.Array, jax.Array]] = None
         # admitted groups whose prefill tokens haven't been materialized:
-        # ([(rid, max_new, batch row)], (max_slots,) device tokens)
+        # ([(rid, max_new, batch row)], (width,) device tokens)
         pending_first: List[Tuple[list, jax.Array]] = []
         total_new = 0
         blocks = 0
         tick = 0
+        resumed = False
+        if manager is not None:
+            step = manager.latest_valid()
+            if step is not None:
+                tick, total_new, blocks = self._restore(manager, step, sched,
+                                                        streams)
+                resumed = True
+        depth_samples: List[int] = []
+        stop = "completed"
+        shutdown = GracefulShutdown(install=install_signals)
         t0 = time.perf_counter()
-        while True:
-            sched.poll(tick)
-            for r in sched.queue:
-                enq_wall.setdefault(r.rid, time.perf_counter())
-            admitted: List[Tuple[int, Request]] = []
-            while (sched.admissible() is not None and None in self.slot_req
-                   and self.alloc.free_count
-                   >= (len(admitted) + 1) * self.pages_per_slot):
-                req = sched.take()
-                slot = self.slot_req.index(None)
-                self.slot_req[slot] = req          # reserve before grouping
-                enq_wall.setdefault(req.rid, time.perf_counter())
-                admitted.append((slot, req))
-            by_len: Dict[int, List[Tuple[int, Request]]] = {}
-            for slot, req in admitted:
-                by_len.setdefault(len(req.prompt), []).append((slot, req))
-            for S in sorted(by_len):
-                rows, first = self._admit_group(by_len[S])
-                pending_first.append((rows, first))
-                total_new += len(rows)
-                done = [s for s, r in by_len[S] if r.max_new <= 1]
-                if done:
-                    self._retire_slots(done)
-            if any(r is not None for r in self.slot_req):
-                meta = [(i, r.rid, self.slot_emitted[i], r.max_new)
-                        for i, r in enumerate(self.slot_req) if r is not None]
-                if self._active_dirty:
-                    self._active_dev = jnp.asarray(
-                        np.array([r is not None for r in self.slot_req]))
-                    self._active_dirty = False
-                self.pool, self._tokens_dev, toks = self._block(
-                    self.params, self.pool, self._tokens_dev,
-                    self._active_dev)
-                blocks += 1
-                # drain the *previous* block on the host while this one runs
-                total_new += self._drain(pending, pending_first, streams,
-                                         done_wall)
-                pending, pending_first = (meta, toks), []
-                finished = []
-                for slot, _, emitted, max_new in meta:
-                    self.slot_emitted[slot] = emitted + self.block_steps
-                    if self.slot_emitted[slot] >= max_new:
-                        finished.append(slot)
-                if finished:
-                    self._retire_slots(finished)
-            elif sched.drained:
-                break
-            else:
-                nxt = sched.next_arrival
-                tick = max(tick + 1, nxt if nxt is not None else tick + 1)
-                continue
-            tick += 1
-        total_new += self._drain(pending, pending_first, streams, done_wall)
+        try:
+            while True:
+                drain = (shutdown.requested
+                         or (drain_after_tick is not None
+                             and tick > drain_after_tick))
+                if drain or (manager is not None and self.snapshot_every > 0
+                             and tick > 0
+                             and tick % self.snapshot_every == 0):
+                    # block boundary snapshot point: flush the in-flight
+                    # drain (token values are unchanged; quarantine slot
+                    # release is deferred to the tick the uninterrupted run
+                    # would perform it, so resumed admission is identical)
+                    total_new += self._flush(pending, pending_first, streams,
+                                             done_wall)
+                    pending, pending_first = None, []
+                    if manager is not None:
+                        self._snapshot(manager, tick, sched, streams,
+                                       total_new, blocks)
+                    if drain:
+                        stop = "preempted"
+                        break
+                sched.poll(tick)
+                sched.shed(tick)
+                self.faults.maybe_leak(tick, self.alloc)
+                depth_samples.append(len(sched.queue))
+                for r in sched.queue:
+                    enq_wall.setdefault(r.rid, time.perf_counter())
+                admitted: List[Tuple[int, Request]] = []
+                while None in self.slot_req:
+                    req = sched.admissible()
+                    if req is None or (self.alloc.free_count
+                                       < (len(admitted) + 1)
+                                       * self.pages_per_slot):
+                        break
+                    sched.take()
+                    reason = self._validate(req)
+                    if reason is not None:
+                        sched.finish(req.rid, REJECTED, reason)
+                        continue
+                    slot = self.slot_req.index(None)
+                    self.slot_req[slot] = req      # reserve before grouping
+                    enq_wall.setdefault(req.rid, time.perf_counter())
+                    self._admit_order.append(req.rid)
+                    admitted.append((slot, req))
+                by_len: Dict[int, List[Tuple[int, Request]]] = {}
+                for slot, req in admitted:
+                    by_len.setdefault(len(req.prompt), []).append((slot, req))
+                for S in sorted(by_len):
+                    rows, first = self._admit_group(by_len[S])
+                    pending_first.append((rows, first))
+                    total_new += len(rows)
+                    done = [(s, r) for s, r in by_len[S] if r.max_new <= 1]
+                    if done:
+                        self._retire_slots([s for s, _ in done])
+                        for _, r in done:
+                            sched.finish(r.rid, COMPLETED)
+                            self._done_tick[r.rid] = tick
+                if any(r is not None for r in self.slot_req):
+                    meta = [(i, r.rid, self.slot_emitted[i], r.max_new)
+                            for i, r in enumerate(self.slot_req)
+                            if r is not None]
+                    if self._active_dirty:
+                        self._active_dev = jnp.asarray(
+                            np.array([r is not None for r in self.slot_req]))
+                        self._active_dirty = False
+                    gain = jnp.asarray(
+                        self.faults.logits_gain(tick, self.max_slots))
+                    self.pool, self._tokens_dev, toks, finite = self._block(
+                        self.params, self.pool, self._tokens_dev,
+                        self._active_dev, gain)
+                    blocks += 1
+                    self.faults.after_dispatch(tick)
+                    # drain the *previous* block on the host while this runs
+                    added, failed = self._drain(pending, pending_first,
+                                                streams, done_wall)
+                    total_new += added
+                    self._mark_failed(failed, done_wall)
+                    failed = self._deferred_failures + failed
+                    self._deferred_failures = []
+                    quarantined = [s for s, rid in failed
+                                   if self.slot_req[s] is not None
+                                   and self.slot_req[s].rid == rid]
+                    if quarantined:
+                        self._retire_slots(quarantined)
+                    pending, pending_first = (tick, meta, toks, finite), []
+                    finished = []
+                    for slot, rid, emitted, max_new in meta:
+                        if (self.slot_req[slot] is None
+                                or self.slot_req[slot].rid != rid):
+                            continue           # quarantined at this drain
+                        self.slot_emitted[slot] = emitted + self.block_steps
+                        if self.slot_emitted[slot] >= max_new:
+                            finished.append(slot)
+                            sched.finish(rid, COMPLETED)
+                            self._done_tick[rid] = tick
+                    if finished:
+                        self._retire_slots(finished)
+                elif sched.drained:
+                    break
+                else:
+                    nxt = sched.next_arrival
+                    tick = max(tick + 1, nxt if nxt is not None else tick + 1)
+                    continue
+                self.alloc.verify()
+                tick += 1
+        finally:
+            shutdown.uninstall()
+        if stop == "completed":
+            total_new += self._flush(pending, pending_first, streams,
+                                     done_wall)
+            # a completed run has retired every slot: the allocator must be
+            # whole again (every retire path — completion, quarantine —
+            # released its pages)
+            self.alloc.verify()
         wall = time.perf_counter() - t0
-        lat = [done_wall[rid] - enq_wall[rid] for rid in done_wall]
+        lat = [done_wall[rid] - enq_wall[rid] for rid in done_wall
+               if rid in enq_wall]
         # warm per-length prefill latency, weighted by the request mix
         pf = [self._prefill_wall_s[len(r.prompt)] for r in requests
               if len(r.prompt) in self._prefill_wall_s]
         n_chips = jax.device_count()
+        statuses = dict(sched.status)
+        with_deadline = [r for r in requests if r.deadline_tick is not None
+                         and r.rid in statuses]
+        hit = sum(1 for r in with_deadline
+                  if statuses[r.rid] == COMPLETED
+                  and self._done_tick.get(r.rid, 1 << 62) <= r.deadline_tick)
         metrics = {
             "n_requests": len(requests),
-            "completed": len(done_wall),
+            "completed": sched.count(COMPLETED),
+            "shed": sched.count(SHED),
+            "rejected": sched.count(REJECTED),
+            "failed": sched.count(FAILED),
+            "deadline_hit_rate": (hit / len(with_deadline)
+                                  if with_deadline else None),
+            "statuses": statuses,
+            "stop": stop,
+            "resumed": resumed,
             "total_new_tokens": total_new,
             "run_wall_s": wall,
             "ticks": tick,
@@ -254,6 +431,7 @@ class ServeEngine:
             "tok_s_per_chip": total_new / max(wall, 1e-9) / n_chips,
             "prefill_latency_s": _percentiles(pf),
             "request_latency_s": _percentiles(lat),
+            "queue_depth": _percentiles(depth_samples),
         }
         return streams, metrics
 
@@ -266,10 +444,23 @@ class ServeEngine:
             self._retire(s)
         self._active_dirty = True
 
-    def _drain(self, pending, pending_first, streams, done_wall) -> int:
+    def _mark_failed(self, failed: List[Tuple[int, int]], done_wall) -> None:
+        """Terminal-status half of quarantine: FAILED overrides an earlier
+        count-based COMPLETED (the completion was provisional — its final
+        block turned out poisoned), and the request leaves the latency /
+        deadline books."""
+        for _, rid in failed:
+            self._sched.finish(rid, FAILED, "nonfinite_logits")
+            done_wall.pop(rid, None)
+            self._done_tick.pop(rid, None)
+
+    def _drain(self, pending, pending_first, streams, done_wall):
         """Materialize prefill first-tokens and the previously launched
         block's tokens into the per-request streams (capped at each request's
-        budget).  Returns decode tokens appended.
+        budget).  Returns ``(decode tokens appended, failed (slot, rid)
+        pairs)`` — a failed pair means the finite sentinel flagged that slot
+        during the block; its stream is truncated before the first
+        non-finite step and frozen.
 
         First-tokens flush before block tokens: a request admitted at tick t
         first appears in the block launched at t, which drains at t+1 — one
@@ -281,18 +472,97 @@ class ServeEngine:
                 if max_new <= 1:
                     done_wall[rid] = time.perf_counter()
         if pending is None:
-            return 0
-        meta, toks_dev = pending
+            return 0, []
+        ptick, meta, toks_dev, finite_dev = pending
+        self.faults.before_drain(ptick)
         toks = np.asarray(toks_dev)                        # (K, B)
+        finite = np.asarray(finite_dev)                    # (K, B) bool
         added = 0
+        failed: List[Tuple[int, int]] = []
         for slot, rid, emitted, max_new in meta:
+            if self._sched.status.get(rid) == FAILED:
+                continue                # stream frozen at its quarantine
             take = min(self.block_steps, max_new - emitted)
+            bad = np.flatnonzero(~finite[:, slot])
+            if bad.size:
+                take = min(take, int(bad[0]))
+                failed.append((slot, rid))
             if take > 0:
                 streams[rid].extend(int(t) for t in toks[:take, slot])
                 added += take
-            if emitted + self.block_steps >= max_new and rid not in done_wall:
+            if (not bad.size and emitted + self.block_steps >= max_new
+                    and rid not in done_wall):
                 done_wall[rid] = time.perf_counter()
+        return added, failed
+
+    def _flush(self, pending, pending_first, streams, done_wall) -> int:
+        """Drain everything in flight *now* (snapshot / shutdown path).
+        Token values are identical to the deferred drain; quarantine slot
+        release is postponed (``_deferred_failures``) so that a resumed run
+        frees the slot at exactly the tick the uninterrupted run would."""
+        added, failed = self._drain(pending, pending_first, streams,
+                                    done_wall)
+        self._mark_failed(failed, done_wall)
+        self._deferred_failures.extend(failed)
         return added
+
+    # -- snapshot / resume -------------------------------------------------
+
+    def _snapshot(self, manager: CheckpointManager, tick: int,
+                  sched: Scheduler, streams, total_new: int,
+                  blocks: int) -> None:
+        """Snapshot the full engine state at a block boundary through the
+        CRC-manifest checkpoint path: device pool + decode tokens as leaves,
+        host bookkeeping as the manifest's meta sidecar.  ``tick`` is the
+        next tick to execute on resume."""
+        host = {
+            "next_tick": tick,
+            "total_new": total_new,
+            "blocks": blocks,
+            "slot_rids": [r.rid if r is not None else None
+                          for r in self.slot_req],
+            "slot_pages": [list(p) if p is not None else None
+                           for p in self.slot_pages],
+            "slot_emitted": list(self.slot_emitted),
+            "streams": {str(rid): s for rid, s in streams.items()},
+            "sched": sched.state(),
+            "alloc": self.alloc.state(),
+            "done_tick": {str(r): t for r, t in self._done_tick.items()},
+            "admit_order": list(self._admit_order),
+            "deferred_failures": [[s, r] for s, r in self._deferred_failures],
+        }
+        manager.save(tick, {"pool": self.pool, "tokens": self._tokens_dev},
+                     blocking=True, meta=host)
+
+    def _restore(self, manager: CheckpointManager, step: int,
+                 sched: Scheduler, streams) -> Tuple[int, int, int]:
+        """Resume from snapshot ``step``: device arrays re-placed through the
+        manager (CRC-verified), host bookkeeping from the meta sidecar.
+        Returns ``(next_tick, total_new, blocks)``."""
+        state = manager.restore(step, {"pool": self.pool,
+                                       "tokens": self._tokens_dev})
+        host = manager.read_meta(step)
+        if host is None:
+            raise ValueError(f"snapshot step_{step} has no engine meta — "
+                             f"not a serve snapshot")
+        self.pool = state["pool"]
+        self._tokens_dev = state["tokens"]
+        self.slot_req = [sched.request_by_rid(rid) if rid is not None else None
+                         for rid in host["slot_rids"]]
+        self.slot_pages = [list(p) if p is not None else None
+                           for p in host["slot_pages"]]
+        self.slot_emitted = [int(e) for e in host["slot_emitted"]]
+        self._active_dirty = True
+        sched.restore_state(host["sched"])
+        self.alloc.restore_state(host["alloc"])
+        streams.update({int(k): list(v) for k, v in host["streams"].items()})
+        self._done_tick = {int(k): int(v)
+                           for k, v in host["done_tick"].items()}
+        self._admit_order = [int(r) for r in host["admit_order"]]
+        self._deferred_failures = [(int(s), int(r))
+                                   for s, r in host["deferred_failures"]]
+        return int(host["next_tick"]), int(host["total_new"]), \
+            int(host["blocks"])
 
     def _warmup(self, requests: Sequence[Request]) -> None:
         """Compile every prefill length plus the decode block before timing,
@@ -307,7 +577,7 @@ class ServeEngine:
         widths = sorted({1, self.max_slots})
         row_np = np.full((self.max_slots,), -1, np.int32)
         row_np[0] = 0
-        for S in sorted({len(r.prompt) for r in requests}):
+        for S in sorted({len(r.prompt) for r in requests if len(r.prompt)}):
             for width in widths:
                 tokens = jnp.zeros((width, S), jnp.int32)
                 nxt, ys = self._prefill(self.params, tokens)  # compile
@@ -324,9 +594,10 @@ class ServeEngine:
                 self.pool, self._tokens_dev = self._write(
                     self.pool, self._tokens_dev, jnp.asarray(row_np),
                     jnp.asarray(table_np), ys, jnp.asarray(len_np), nxt)
-        self.pool, self._tokens_dev, toks = self._block(
+        self.pool, self._tokens_dev, toks, _ = self._block(
             self.params, self.pool, self._tokens_dev,
-            jnp.ones((self.max_slots,), bool))
+            jnp.ones((self.max_slots,), bool),
+            jnp.ones((self.max_slots,), jnp.float32))
         jax.block_until_ready(toks)
         # the warmup wrote into the (donated) pool: restore a clean state
         self.pool = model.init_paged_pool(self.cfg, self.max_slots,

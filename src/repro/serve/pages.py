@@ -59,6 +59,47 @@ class PagePool:
             self._used.discard(p)
             self._free.append(p)
 
+    def verify(self) -> None:
+        """Leak / invariant check: every allocatable page is in exactly one
+        of {free, used}, the trash page in neither, and the free list holds
+        no duplicates — ``free + used == n_pages - 1``.  Raises
+        :class:`RuntimeError` on any violation (a retire path that dropped a
+        slot's pages without releasing shows up here as a leak).  The engine
+        asserts this at every block boundary and on shutdown."""
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise RuntimeError(
+                f"page pool corrupt: duplicate pages in the free list "
+                f"({len(self._free) - len(free)} dupes)")
+        both = free & self._used
+        if both:
+            raise RuntimeError(
+                f"page pool corrupt: pages both free and used: {sorted(both)}")
+        if 0 in free or 0 in self._used:
+            raise RuntimeError("page pool corrupt: trash page 0 entered the "
+                               "allocator")
+        n = len(free) + len(self._used)
+        if n != self.n_pages - 1:
+            raise RuntimeError(
+                f"page pool leak: free({len(free)}) + used({len(self._used)})"
+                f" = {n} != {self.n_pages - 1} allocatable pages")
+
+    # ------------------------------------------------- snapshot / restore
+    def state(self) -> dict:
+        """JSON-serializable allocator state.  The free list is ordered —
+        LIFO placement is part of the engine's determinism contract, so a
+        resumed run must pop pages in exactly the interrupted run's order."""
+        return {"n_pages": self.n_pages, "free": list(self._free),
+                "used": sorted(self._used)}
+
+    def restore_state(self, state: dict) -> None:
+        if int(state["n_pages"]) != self.n_pages:
+            raise ValueError(f"snapshot pool has {state['n_pages']} pages, "
+                             f"engine has {self.n_pages}")
+        self._free = [int(p) for p in state["free"]]
+        self._used = {int(p) for p in state["used"]}
+        self.verify()
+
 
 def pack_cache(pool, cache, table, slots=None):
     """Scatter a contiguous decode cache into the paged pool.

@@ -1,19 +1,44 @@
-"""Request admission for continuous batching, plus the seeded synthetic
-open-loop workload the benchmarks and determinism tests run against.
+"""Request admission for continuous batching: deadline-aware bounded queue
+with deterministic load shedding, plus the seeded synthetic open-loop
+workload the benchmarks and determinism tests run against.
 
 Time is measured in *ticks* — one tick per K-step decode block — so the
-whole schedule (arrivals, admissions, completions) is a pure function of the
-workload seed and the engine geometry, never of wall-clock jitter.  That is
-what makes "same seed ⇒ same per-request token streams" a testable property
-even while sequences join and leave mid-flight.
+whole schedule (arrivals, admissions, sheds, completions) is a pure function
+of the workload seed and the engine geometry, never of wall-clock jitter.
+That is what makes "same seed ⇒ same per-request token streams *and* same
+shed set" a testable property even while sequences join and leave mid-flight.
+
+Every request ends in exactly one terminal status:
+
+=============  ==============================================================
+``COMPLETED``  full ``max_new`` token budget emitted.
+``SHED``       dropped from the queue before admission: its ``deadline_tick``
+               passed, or the deadline provably cannot be met given the
+               engine's ``block_steps`` and the request's queue position.
+``REJECTED``   refused at arrival (bounded queue full) or at admission
+               (validation: empty prompt, budget overflow) — never admitted,
+               never corrupts engine state.
+``FAILED``     admitted but quarantined mid-decode (non-finite logits on its
+               slot); its stream is truncated at the last finite token.
+=============  ==============================================================
+
+Under overload the queue therefore degrades into an explicit shed rate with
+bounded wait for the survivors, instead of unbounded FIFO queue delay.
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+#: Terminal request statuses (DESIGN.md §5c).
+COMPLETED = "COMPLETED"
+SHED = "SHED"
+REJECTED = "REJECTED"
+FAILED = "FAILED"
+TERMINAL_STATUSES = (COMPLETED, SHED, REJECTED, FAILED)
 
 
 @dataclass(frozen=True)
@@ -22,17 +47,22 @@ class Request:
     prompt: Tuple[int, ...]          # token ids
     max_new: int                     # decode budget
     arrival_tick: int                # open-loop arrival time, in decode blocks
+    deadline_tick: Optional[int] = None  # absolute tick the final token is due
 
 
 def synthetic_workload(seed: int, n_requests: int, rate: float,
                        prompt_lens: Sequence[int], vocab: int,
-                       max_new_range: Tuple[int, int] = (8, 32)) -> List[Request]:
+                       max_new_range: Tuple[int, int] = (8, 32),
+                       deadline_slack: Optional[Tuple[int, int]] = None,
+                       ) -> List[Request]:
     """Open-loop Poisson-ish arrivals: exponential inter-arrival times with
     mean ``1 / rate`` ticks, floored to integer ticks.
 
     Prompt lengths are drawn from the small ``prompt_lens`` set (each length
     is a separate prefill jit entry — SSM archs cannot pad prompts, so the
-    engine prefills at exact length).
+    engine prefills at exact length).  ``deadline_slack=(lo, hi)`` attaches
+    ``deadline_tick = arrival_tick + U[lo, hi]`` to every request (the
+    overload benchmark's shedding knob); the default is no deadlines.
     """
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / max(rate, 1e-9), size=n_requests)
@@ -40,44 +70,118 @@ def synthetic_workload(seed: int, n_requests: int, rate: float,
     lens = rng.choice(np.asarray(prompt_lens), size=n_requests)
     lo, hi = max_new_range
     news = rng.integers(lo, hi + 1, size=n_requests)
+    slacks = (rng.integers(deadline_slack[0], deadline_slack[1] + 1,
+                           size=n_requests)
+              if deadline_slack is not None else None)
     return [
         Request(rid=i,
                 prompt=tuple(int(t) for t in rng.integers(0, vocab, size=lens[i])),
                 max_new=int(news[i]),
-                arrival_tick=int(ticks[i]))
+                arrival_tick=int(ticks[i]),
+                deadline_tick=(int(ticks[i] + slacks[i])
+                               if slacks is not None else None))
         for i in range(n_requests)
     ]
 
 
 @dataclass
 class Scheduler:
-    """FIFO admission queue over the open-loop arrival stream.
+    """Deadline-aware bounded FIFO admission queue over the open-loop arrival
+    stream.
 
-    The engine polls :meth:`admissible` once per tick (block boundary) and
-    admits while it has a free decode slot *and* the page allocator can cover
-    a full sequence; arrival order is the only priority — no reordering, so
-    the admitted set at every tick is deterministic.
+    The engine polls once per tick (block boundary): :meth:`poll` moves due
+    arrivals into the queue (a full bounded queue refuses them — ``REJECTED``),
+    :meth:`shed` drops queued requests whose deadline has passed or provably
+    cannot be met, and the engine admits from the head while it has a free
+    decode slot *and* the page allocator can cover a full sequence.  Arrival
+    order is the only priority — no reordering, so the admitted set *and* the
+    shed set at every tick are deterministic.
+
+    ``block_steps``/``max_slots`` parameterize the feasibility bound: a
+    request at queue position ``p`` cannot be admitted before tick
+    ``tick + p // max_slots`` (even if every slot freed each tick), and once
+    admitted at ``t`` it completes at ``t + ceil((max_new-1)/K) - 1`` — if
+    that optimistic lower bound already overshoots the deadline, waiting
+    cannot save the request and it is shed *now* rather than after burning
+    queue wait.
     """
     requests: Sequence[Request]
+    max_queue: Optional[int] = None      # bounded queue depth (None=unbounded)
+    block_steps: int = 1
+    max_slots: int = 1
     queue: Deque[Request] = field(default_factory=deque)
+    status: Dict[int, str] = field(default_factory=dict)  # rid -> terminal
+    reasons: Dict[int, str] = field(default_factory=dict)  # rid -> detail
     _cursor: int = 0
 
     def __post_init__(self):
         self.requests = sorted(self.requests,
                                key=lambda r: (r.arrival_tick, r.rid))
+        self._by_rid = {r.rid: r for r in self.requests}
 
+    # ------------------------------------------------------------ arrival
     def poll(self, tick: int) -> None:
-        """Move requests whose arrival tick has passed into the queue."""
+        """Move requests whose arrival tick has passed into the queue; a full
+        bounded queue refuses the arrival outright (``REJECTED`` — the
+        explicit backpressure signal, instead of unbounded queue growth)."""
         while (self._cursor < len(self.requests)
                and self.requests[self._cursor].arrival_tick <= tick):
-            self.queue.append(self.requests[self._cursor])
+            req = self.requests[self._cursor]
             self._cursor += 1
+            if (self.max_queue is not None
+                    and len(self.queue) >= self.max_queue):
+                self.finish(req.rid, REJECTED, "queue_full")
+            else:
+                self.queue.append(req)
 
+    # ----------------------------------------------------------- shedding
+    def _completion_blocks(self, req: Request) -> int:
+        """Ticks from admission to the final token: the prefill tick emits 1
+        token and each block K more, so completion lands ``ceil((max_new-1)/K)
+        - 1`` ticks after admission (0 for a prefill-only request)."""
+        return max(-(-(req.max_new - 1) // self.block_steps) - 1, 0)
+
+    def shed(self, tick: int) -> List[Request]:
+        """Drop every queued request whose deadline is unmeetable: already
+        expired, or ``earliest_admission + completion_blocks > deadline``
+        where earliest admission assumes (optimistically — so the bound is a
+        proof, not a heuristic) that all ``max_slots`` slots free every tick.
+        Returns the shed requests in queue order."""
+        shed: List[Request] = []
+        kept: Deque[Request] = deque()
+        for pos, req in enumerate(self.queue):
+            if req.deadline_tick is None:
+                kept.append(req)
+                continue
+            earliest = tick + len(kept) // max(self.max_slots, 1)
+            if earliest + self._completion_blocks(req) > req.deadline_tick:
+                shed.append(req)
+                self.finish(req.rid, SHED, "deadline")
+            else:
+                kept.append(req)
+        self.queue = kept
+        return shed
+
+    # ---------------------------------------------------------- admission
     def admissible(self) -> Optional[Request]:
         return self.queue[0] if self.queue else None
 
     def take(self) -> Request:
         return self.queue.popleft()
+
+    # ----------------------------------------------------------- terminal
+    def finish(self, rid: int, status: str, reason: str = "") -> None:
+        if status not in TERMINAL_STATUSES:
+            raise ValueError(f"unknown terminal status {status!r}")
+        self.status[rid] = status
+        if reason:
+            self.reasons[rid] = reason
+
+    def count(self, status: str) -> int:
+        return sum(1 for s in self.status.values() if s == status)
+
+    def request_by_rid(self, rid: int) -> Request:
+        return self._by_rid[rid]
 
     @property
     def drained(self) -> bool:
@@ -88,3 +192,20 @@ class Scheduler:
         if self._cursor < len(self.requests):
             return self.requests[self._cursor].arrival_tick
         return None
+
+    # ------------------------------------------------- snapshot / restore
+    def state(self) -> Dict:
+        """JSON-serializable scheduler state for the engine snapshot: the
+        cursor, the queued rids (order matters — FIFO), and the terminal
+        statuses.  Requests themselves are NOT serialized; the resuming run
+        re-supplies the identical workload (same seed) and rids re-resolve."""
+        return {"cursor": self._cursor,
+                "queue": [r.rid for r in self.queue],
+                "status": dict(self.status),
+                "reasons": dict(self.reasons)}
+
+    def restore_state(self, state: Dict) -> None:
+        self._cursor = int(state["cursor"])
+        self.queue = deque(self._by_rid[int(r)] for r in state["queue"])
+        self.status = {int(k): v for k, v in state["status"].items()}
+        self.reasons = {int(k): v for k, v in state["reasons"].items()}

@@ -297,3 +297,218 @@ def test_engine_swa_arch_with_window_straddling_prompts():
                                           max_len=40,
                                           attn_args={"backend": "jnp"})
         assert list(toks[0]) == s1[r.rid], r.rid
+
+
+# ---------------------------------------------------------------------------
+# Chaos-hardened serve cell (DESIGN.md §5c): admission validation, deadline
+# shedding, poisoned-slot quarantine, allocator invariants, snapshot-resume
+# ---------------------------------------------------------------------------
+
+def _chaos_geo(**kw):
+    geo = dict(max_slots=3, max_len=32, page_size=8, block_steps=2,
+               attn_args={"backend": "jnp"})
+    geo.update(kw)
+    return geo
+
+
+@pytest.fixture(scope="module")
+def qwen_params():
+    cfg = _paged_cfg("qwen3-0.6b")
+    return model.init_params(jax.random.PRNGKey(1), cfg), cfg
+
+
+def _req(rid, prompt, max_new, arrival=0, deadline=None):
+    from repro.serve import Request
+    return Request(rid=rid, prompt=tuple(prompt), max_new=max_new,
+                   arrival_tick=arrival, deadline_tick=deadline)
+
+
+@pytest.mark.parametrize("bad,reason", [
+    (dict(prompt=(), max_new=4), "empty_prompt"),
+    (dict(prompt=(1, 2, 3), max_new=0), "nonpositive_max_new"),
+    (dict(prompt=tuple(range(1, 30)), max_new=8), "budget_overflow"),
+])
+def test_admission_validation_rejects(qwen_params, bad, reason):
+    """An invalid request is refused with terminal REJECTED (+reason), never
+    admitted, and never perturbs the valid requests around it."""
+    from repro.serve import REJECTED, ServeEngine
+
+    params, cfg = qwen_params
+    good = [_req(0, [5, 6, 7, 8], 4), _req(1, [9, 10, 11, 12], 5, arrival=1)]
+    reqs = good + [_req(99, arrival=0, **bad)]
+    eng = ServeEngine(params, cfg, **_chaos_geo())
+    streams, m = eng.run(reqs, install_signals=False)
+    assert m["statuses"][99] == REJECTED
+    assert eng._sched.reasons[99] == reason
+    assert streams[99] == []
+    assert m["completed"] == 2 and m["rejected"] == 1
+    # the valid requests are untouched by the reject: same streams as a run
+    # without the invalid request at all
+    ref, _ = ServeEngine(params, cfg, **_chaos_geo()).run(
+        good, install_signals=False)
+    assert all(streams[r.rid] == ref[r.rid] for r in good)
+
+
+def test_admission_validation_swa_ring(qwen_params):
+    """SWA engine sized below the window (ring < window): a request that
+    outgrows the ring is REJECTED (its window would straddle evicted slots);
+    one that fits inside the ring completes."""
+    del qwen_params
+    from repro.serve import REJECTED, ServeEngine
+
+    cfg = _swa_cfg()
+    assert cfg.swa_window == 16
+    params = model.init_params(jax.random.PRNGKey(2), cfg)
+    # max_len 12 < window 16 -> ring C = 12
+    eng = ServeEngine(params, cfg, max_slots=2, max_len=12, page_size=4,
+                      block_steps=2, attn_args={"backend": "jnp"})
+    reqs = [_req(0, [3] * 8, 3), _req(1, [4] * 8, 8)]   # totals 11, 16
+    streams, m = eng.run(reqs, install_signals=False)
+    assert m["statuses"][0] == "COMPLETED" and len(streams[0]) == 3
+    assert m["statuses"][1] == REJECTED
+    assert eng._sched.reasons[1] == "swa_ring_violation"
+
+
+def test_page_pool_verify_invariants():
+    """verify() catches leaks, double-listing, trash-page capture."""
+    from repro.serve import PagePool
+
+    pool = PagePool(8)
+    pool.allocate(3)
+    pool.verify()                                      # clean split passes
+    leaked = pool._free.pop()                          # silent leak
+    with pytest.raises(RuntimeError, match="leak"):
+        pool.verify()
+    pool._free.append(leaked)
+    pool.verify()
+    pool._free.append(pool._free[0])                   # duplicate free entry
+    with pytest.raises(RuntimeError, match="duplicate"):
+        pool.verify()
+    pool._free.pop()
+    pool._free.append(next(iter(pool._used)))          # free AND used
+    with pytest.raises(RuntimeError, match="both free and used"):
+        pool.verify()
+    pool._free.pop()
+    pool._free.append(0)                               # trash page captured
+    with pytest.raises(RuntimeError, match="trash page"):
+        pool.verify()
+
+
+def test_engine_double_retire_raises(qwen_params):
+    from repro.serve import ServeEngine
+
+    params, cfg = qwen_params
+    eng = ServeEngine(params, cfg, **_chaos_geo())
+    eng.slot_pages[0] = eng.alloc.allocate(eng.pages_per_slot)
+    eng._retire(0)
+    with pytest.raises(RuntimeError, match="retired twice"):
+        eng._retire(0)
+    eng.alloc.verify()
+
+
+def test_overload_shed_deterministic(qwen_params):
+    """Burst >> capacity with a bounded queue: terminates (no deadlock),
+    sheds and rejects deterministically (identical terminal sets across two
+    runs), keeps FIFO order among the admitted survivors, and every page is
+    released at the end (run()'s final verify)."""
+    from repro.serve import COMPLETED, ServeEngine, synthetic_workload
+
+    params, cfg = qwen_params
+    # ~20 requests inside a handful of ticks against 3 slots x 2-step blocks
+    reqs = synthetic_workload(seed=3, n_requests=20, rate=6.0,
+                              prompt_lens=[4, 8], vocab=cfg.vocab,
+                              max_new_range=(3, 9), deadline_slack=(1, 6))
+    runs = []
+    for _ in range(2):
+        eng = ServeEngine(params, cfg, max_queue=5, **_chaos_geo())
+        streams, m = eng.run(reqs, install_signals=False)
+        runs.append((streams, m, list(eng._admit_order)))
+    (s1, m1, a1), (s2, m2, a2) = runs
+    assert s1 == s2 and m1["statuses"] == m2["statuses"] and a1 == a2
+    assert m1["shed"] > 0 and m1["rejected"] > 0 and m1["completed"] > 0
+    assert (m1["completed"] + m1["shed"] + m1["rejected"]
+            == len(reqs))                  # every request reached a terminal
+    # FIFO among survivors: admission order == arrival order restricted to
+    # the admitted set
+    arrival = [r.rid for r in sorted(reqs, key=lambda r: (r.arrival_tick,
+                                                          r.rid))]
+    assert a1 == [rid for rid in arrival if rid in set(a1)]
+    # completed requests got their full budget
+    by_rid = {r.rid: r for r in reqs}
+    for rid, st in m1["statuses"].items():
+        if st == COMPLETED:
+            assert len(s1[rid]) == by_rid[rid].max_new
+
+
+def test_nan_quarantine_isolates_slot(qwen_params):
+    """nan_logits on one slot: that request FAILs with a truncated stream;
+    every other request's stream is bit-identical to the clean run."""
+    from repro.robustness.faults import FaultPlan
+    from repro.serve import FAILED, ServeEngine, synthetic_workload
+
+    params, cfg = qwen_params
+    reqs = synthetic_workload(seed=7, n_requests=7, rate=0.8,
+                              prompt_lens=[4, 8], vocab=cfg.vocab,
+                              max_new_range=(3, 9))
+    ref, mref = ServeEngine(params, cfg, **_chaos_geo()).run(
+        reqs, install_signals=False)
+    plan = FaultPlan.parse(["nan_logits@2:0"], seed=0)
+    streams, m = ServeEngine(params, cfg, fault_plan=plan,
+                             **_chaos_geo()).run(reqs, install_signals=False)
+    failed = [rid for rid, st in m["statuses"].items() if st == FAILED]
+    assert len(failed) == 1 and m["failed"] == 1
+    (frid,) = failed
+    assert len(streams[frid]) < len(ref[frid])         # truncated...
+    assert streams[frid] == ref[frid][:len(streams[frid])]  # ...not garbled
+    for r in reqs:
+        if r.rid != frid:
+            assert streams[r.rid] == ref[r.rid], r.rid
+    assert m["completed"] == len(reqs) - 1
+
+
+def test_pool_leak_fails_loudly(qwen_params):
+    """pool_leak: the boundary verify turns a silent allocator leak into a
+    RuntimeError instead of serving on."""
+    from repro.robustness.faults import FaultPlan
+    from repro.serve import ServeEngine, synthetic_workload
+
+    params, cfg = qwen_params
+    reqs = synthetic_workload(seed=7, n_requests=7, rate=0.8,
+                              prompt_lens=[4, 8], vocab=cfg.vocab,
+                              max_new_range=(3, 9))
+    plan = FaultPlan.parse(["pool_leak@1"], seed=0)
+    eng = ServeEngine(params, cfg, fault_plan=plan, **_chaos_geo())
+    with pytest.raises(RuntimeError, match="leak"):
+        eng.run(reqs, install_signals=False)
+
+
+def test_snapshot_resume_bit_identical(qwen_params, tmp_path):
+    """Drain at several block boundaries (the signal-free seam), resume with
+    a fresh engine: per-request streams and terminal statuses are
+    bit-identical to the uninterrupted run — including a quarantine
+    straddling the snapshot (NaN injected one tick before the drain)."""
+    from repro.robustness.faults import FaultPlan
+    from repro.serve import ServeEngine, synthetic_workload
+
+    params, cfg = qwen_params
+    reqs = synthetic_workload(seed=7, n_requests=7, rate=0.8,
+                              prompt_lens=[4, 8], vocab=cfg.vocab,
+                              max_new_range=(3, 9))
+    plan = FaultPlan.parse(["nan_logits@2:0"], seed=0)
+    ref, mref = ServeEngine(params, cfg, fault_plan=plan, **_chaos_geo()).run(
+        reqs, install_signals=False)
+    for cut in (1, 3, 6):
+        d = str(tmp_path / f"cut{cut}")
+        _, m1 = ServeEngine(params, cfg, fault_plan=plan, **_chaos_geo()).run(
+            reqs, snapshot_dir=d, drain_after_tick=cut,
+            install_signals=False)
+        assert m1["stop"] == "preempted"
+        # resume with the same plan: injection is tick-keyed, so a fault tick
+        # already executed before the cut cannot re-fire, and one after the
+        # cut fires exactly as the uninterrupted run's did
+        streams, m2 = ServeEngine(params, cfg, fault_plan=plan,
+                                  **_chaos_geo()).run(
+            reqs, snapshot_dir=d, install_signals=False)
+        assert m2["resumed"] and m2["stop"] == "completed"
+        assert streams == ref, cut
+        assert m2["statuses"] == mref["statuses"], cut

@@ -1,0 +1,119 @@
+"""Serve-chaos lane (DESIGN.md §5c): full-process serve fault injection via
+``examples/serve.py --continuous --inject-fault``.
+
+Each scenario faults a REAL serve process mid-workload, relaunches the
+identical command, and asserts the recovery invariant by literal comparison
+of the ``--stream-out`` artifacts: every surviving/completed request's token
+stream and terminal status is identical to the uninterrupted reference run's.
+
+Marked ``slow`` + ``serve_chaos``: CI runs these in the non-blocking
+serve-chaos lane (``pytest -m serve_chaos``); the in-process halves of the
+matrix (quarantine, shedding, snapshot seam) are tier-1 in ``test_serve.py``.
+Artifacts land under ``artifacts/serve_chaos/`` for CI upload.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = [pytest.mark.slow, pytest.mark.serve_chaos]
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+SRC = os.path.join(ROOT, "src")
+ART = os.path.join(ROOT, "artifacts", "serve_chaos")
+
+EXIT_PREEMPTED = 75
+
+#: One shared workload for every scenario: 12 requests over ~10 ticks against
+#: 3 slots — small enough for CPU, long enough that a tick-5 fault interrupts
+#: several requests mid-decode.
+BASE_ARGS = ["--arch", "qwen3-0.6b", "--continuous", "--batch", "3",
+             "--prompt-len", "4", "--max-new", "8", "--block-steps", "2",
+             "--seed", "0"]
+
+
+def run_serve(name, *extra, expect=0):
+    os.makedirs(ART, exist_ok=True)
+    out = os.path.join(ART, f"{name}.json")
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    cmd = [sys.executable, os.path.join(ROOT, "examples", "serve.py"),
+           *BASE_ARGS, "--stream-out", out, *extra]
+    p = subprocess.run(cmd, capture_output=True, text=True, timeout=900,
+                       env=env, cwd=ROOT)
+    assert p.returncode == expect, (
+        f"{name}: rc={p.returncode} want {expect}\n{p.stdout}\n{p.stderr}")
+    return out
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def reference():
+    """The uninterrupted run's streams + statuses."""
+    return load(run_serve("reference"))
+
+
+def test_engine_kill_then_resume(reference, tmp_path):
+    """SIGKILL mid-workload (no drain, snapshot is stale): the relaunch
+    resumes from the last boundary snapshot and finishes with streams
+    bit-identical to the uninterrupted run."""
+    snaps = str(tmp_path / "snaps")
+    run_serve("kill", "--snapshot-dir", snaps, "--snapshot-every", "2",
+              "--inject-fault", "engine_kill@5", expect=-9)
+    got = load(run_serve("kill_resume", "--snapshot-dir", snaps))
+    assert got["resumed"] and got["stop"] == "completed"
+    assert got["streams"] == reference["streams"]
+    assert got["statuses"] == reference["statuses"]
+
+
+def test_sigterm_drain_then_resume(reference, tmp_path):
+    """SIGTERM mid-workload: the engine stops admission, flushes the
+    in-flight block, snapshots, exits EXIT_PREEMPTED (75); the relaunch
+    resumes bit-identically — no boundary-cadence snapshot needed, the drain
+    wrote its own."""
+    snaps = str(tmp_path / "snaps")
+    partial = load(run_serve("term", "--snapshot-dir", snaps,
+                             "--inject-fault", "engine_kill@5:term",
+                             expect=EXIT_PREEMPTED))
+    assert partial["stop"] == "preempted"
+    # the drained run's partial streams are prefixes of the reference
+    for rid, s in partial["streams"].items():
+        assert s == reference["streams"][rid][:len(s)], rid
+    got = load(run_serve("term_resume", "--snapshot-dir", snaps))
+    assert got["resumed"] and got["stop"] == "completed"
+    assert got["streams"] == reference["streams"]
+    assert got["statuses"] == reference["statuses"]
+
+
+def test_nan_logits_quarantine(reference):
+    """nan_logits on one slot: exactly one request FAILs (truncated, not
+    garbled), every other stream is bit-identical, exit stays clean — the
+    engine never dies on a poisoned slot."""
+    got = load(run_serve("nan", "--inject-fault", "nan_logits@2:0"))
+    failed = [r for r, st in got["statuses"].items() if st == "FAILED"]
+    assert len(failed) == 1
+    (frid,) = failed
+    ref = reference["streams"]
+    assert got["streams"][frid] == ref[frid][:len(got["streams"][frid])]
+    assert len(got["streams"][frid]) < len(ref[frid])
+    for rid, s in got["streams"].items():
+        if rid != frid:
+            assert s == ref[rid], rid
+
+
+def test_pool_leak_dies_loudly():
+    """pool_leak: the boundary allocator verify crashes the process rather
+    than serving from a corrupt pool (exit != 0, RuntimeError on stderr)."""
+    os.makedirs(ART, exist_ok=True)
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    cmd = [sys.executable, os.path.join(ROOT, "examples", "serve.py"),
+           *BASE_ARGS, "--inject-fault", "pool_leak@3"]
+    p = subprocess.run(cmd, capture_output=True, text=True, timeout=900,
+                       env=env, cwd=ROOT)
+    assert p.returncode not in (0, EXIT_PREEMPTED)
+    assert "page pool leak" in p.stderr
